@@ -1,0 +1,56 @@
+"""MM2IM kernel ablations — each design feature toggled, Table-II workloads.
+
+Features ablated (modeled on v5e terms; correctness of every variant is
+separately asserted by tests/test_mm2im_kernel.py):
+
+  * fusion        — fused kernel vs unfused IOM (matmul -> HBM -> scatter)
+  * grid order    — auto (traffic-chosen) vs forced bcj / cbj
+  * block_oh      — planner choice vs minimal blocks (halo recompute cost)
+  * crop skip     — tile-level cmap skip vs computing the full IOM output
+                    (VALID-sized) and cropping afterwards
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.paper_models import TABLE_II
+from repro.core import perf_model
+from repro.core.maps import TConvProblem, drop_stats
+from repro.kernels.mm2im_pallas import plan_blocks
+from repro.kernels.ref import crop_offsets
+
+
+def _estimate(p, block_oh, block_oc, grid_order="auto", bits=8):
+    return perf_model.mm2im_estimate(p, batch=1, block_oh=block_oh,
+                                     block_oc=block_oc, bits=bits,
+                                     grid_order=grid_order)
+
+
+def main() -> None:
+    for row in TABLE_II:
+        p = row.problem
+        boh, boc = plan_blocks(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride,
+                               p.padding, in_bytes=1)
+        base = _estimate(p, boh, boc)
+        # grid order ablation
+        t_bcj = _estimate(p, boh, boc, "bcj").t_overlapped
+        t_cbj = _estimate(p, boh, boc, "cbj").t_overlapped
+        # minimal row block (halo recompute worst case)
+        t_tiny = _estimate(p, p.stride, min(boc, 8)).t_overlapped
+        # no-crop-skip: model the full (VALID) output being computed
+        p_full = TConvProblem(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, "VALID")
+        t_nocrop = _estimate(p_full, *plan_blocks(
+            p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, "VALID", in_bytes=1)
+        ).t_overlapped
+        t_unfused = perf_model.iom_unfused_estimate(p, bits=8).t_overlapped
+        t = base.t_overlapped
+        emit(f"ablation_{row.name}", t * 1e6,
+             f"vs_unfused={t_unfused/t:.2f}x;"
+             f"grid_auto_vs_worst={max(t_bcj, t_cbj)/t:.2f}x;"
+             f"tiny_blocks={t_tiny/t:.2f}x_slower;"
+             f"no_crop_skip={t_nocrop/t:.2f}x_slower;"
+             f"D_r={drop_stats(p)['D_r']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

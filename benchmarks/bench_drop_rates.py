@@ -1,0 +1,41 @@
+"""Paper Fig. 1 / Fig. 7: percentage of cropped (dropped) outputs.
+
+Analytic drop rates D_r over (a) the generative-model layers of Fig. 1 /
+Table II and (b) the 261-problem synthetic sweep, grouped the way Fig. 7
+groups them (by Ks / Ih / S).  Cross-checks the paper's headline numbers:
+Fig. 2 example D_r = 0.55; DCGAN <= 28% ineffectual work.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_models import TABLE_II, synthetic_sweep
+from repro.core.maps import TConvProblem, drop_stats
+
+
+def main() -> None:
+    # Fig. 2 worked example.
+    ex = drop_stats(TConvProblem(2, 2, 2, 3, 2, 1))
+    emit("fig2_example_drop_rate", 0.0,
+         f"D_r={ex['D_r']:.3f};paper=0.55;P/F={ex['buffer_saving_no_skip']:.2f}"
+         f";skip={ex['buffer_saving_with_skip']:.2f}")
+
+    # Fig. 1: model layers.
+    for row in TABLE_II:
+        st = drop_stats(row.problem)
+        emit(f"fig1_drop_{row.name}", 0.0,
+             f"D_r={st['D_r']:.3f};eff_frac={st['effectual_fraction']:.3f}")
+
+    # Fig. 7: synthetic sweep grouped by (Ks, S).
+    groups: dict = {}
+    for p in synthetic_sweep():
+        groups.setdefault((p.ks, p.stride), []).append(drop_stats(p)["D_r"])
+    for (ks, s), v in sorted(groups.items()):
+        emit(f"fig7_drop_ks{ks}_s{s}", 0.0,
+             f"mean_D_r={np.mean(v):.3f};n={len(v)}")
+
+
+if __name__ == "__main__":
+    main()

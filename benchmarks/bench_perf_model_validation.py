@@ -1,0 +1,75 @@
+"""Paper §V-F: performance-model validation.
+
+The paper validates its analytical model within 10% of measured hardware.
+Without a TPU we validate against the *compiler*: the model's FLOP and
+byte counts for the pure-XLA methods must match ``cost_analysis()`` of
+the actually-compiled programs, and the MM2IM kernel's issued-MAC formula
+must match the grid geometry exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import perf_model
+from repro.core.maps import TConvProblem
+from repro.kernels import ref
+from repro.kernels.baselines import tdc_macs, zero_insertion_macs
+from repro.kernels.mm2im_pallas import plan_blocks
+
+PROBLEMS = [
+    TConvProblem(8, 8, 64, 5, 32, 2),
+    TConvProblem(16, 16, 32, 3, 16, 1),
+    TConvProblem(4, 4, 128, 5, 64, 2),
+    TConvProblem(9, 9, 96, 7, 48, 2),
+]
+
+
+def xla_flops(fn, *args) -> float:
+    comp = jax.jit(fn).lower(*args).compile()
+    ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def main() -> None:
+    for p in PROBLEMS:
+        x = jnp.zeros((1, p.ih, p.iw, p.ic), jnp.float32)
+        w = jnp.zeros((p.ks, p.ks, p.oc, p.ic), jnp.float32)
+
+        # Unfused IOM: model says 2*M*N*K (+ scatter adds).
+        got = xla_flops(lambda a, b: ref.iom_reference(a, b, stride=p.stride), x, w)
+        want = 2.0 * p.macs
+        emit(f"V-F_iom_unfused_{p.ih}x{p.ic}x{p.ks}s{p.stride}", 0.0,
+             f"model={want:.3e};xla={got:.3e};ratio={got/want:.3f}")
+
+        # Zero-insertion: model MACs == conv over dilated input.
+        got = xla_flops(lambda a, b: ref.tconv_direct(a, b, stride=p.stride), x, w)
+        want = 2.0 * zero_insertion_macs(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride)
+        emit(f"V-F_zero_insertion_{p.ih}x{p.ic}x{p.ks}s{p.stride}", 0.0,
+             f"model={want:.3e};xla={got:.3e};ratio={got/want:.3f}")
+
+        # MM2IM issued MACs: formula vs explicit grid-geometry count.
+        est = perf_model.mm2im_estimate(p, batch=1, bits=8)
+        block_oh, block_oc = plan_blocks(p.ih, p.iw, p.ic, p.ks, p.oc,
+                                         p.stride, p.padding, in_bytes=1)
+        s = p.stride
+        ct, _ = ref.crop_offsets(p.ks, s, p.padding)
+        bi = block_oh // s
+        delta = -(-max(p.ks - 1 - ct, 0) // s)
+        eps = (ct - 1) // s
+        n_slab = bi + delta + eps + 1
+        n_j = -(-p.oh // block_oh)
+        n_c = -(-p.oc // block_oc)
+        manual = n_c * n_j * (n_slab * p.iw) * (p.ks ** 2 * block_oc) * p.ic
+        emit(f"V-F_mm2im_issued_{p.ih}x{p.ic}x{p.ks}s{p.stride}", 0.0,
+             f"model={est.issued_macs};manual={manual};"
+             f"match={est.issued_macs == manual}")
+
+
+if __name__ == "__main__":
+    main()

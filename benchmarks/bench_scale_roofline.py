@@ -1,0 +1,94 @@
+"""Scale table: the 32-cell (arch x shape) roofline from the dry-run.
+
+Reads ``results/dryrun_final.json`` (falling back to dryrun_all.json),
+derives the three roofline terms per cell on the single-pod mesh
+(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI), the dominant
+bottleneck, MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with
+N = active params, and the useful-compute ratio.
+
+Two memory terms are reported for attention-bearing cells:
+  * t_mem      — the raw HLO-derived byte proxy (pure-XLA execution);
+  * t_mem_fl   — flash-corrected: attention-interior traffic (tagged via
+    named_scope + nested-scan structural attribution) stays in VMEM when
+    the validated Pallas flash kernel (kernels/flash_attention.py) runs
+    the layer on real TPUs.  Both are recorded in EXPERIMENTS §Roofline.
+
+This module is EXPERIMENTS.md §Roofline's generator.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.configs import registry
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def active_params(arch: str) -> float:
+    spec = registry.get(arch)
+    cfg = spec.model
+    n_total = cfg.param_count()
+    if cfg.n_experts:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * ff
+        inactive = (cfg.n_experts - cfg.top_k) * per_expert * cfg.n_layers
+        return n_total - inactive
+    return n_total
+
+
+def tokens_per_step(shape: str) -> int:
+    seq, bs, kind = registry.SHAPES[shape]
+    return seq * bs if kind in ("train", "prefill") else bs
+
+
+def main(path: str = None) -> None:
+    f = None
+    for cand in ([path] if path else []) + ["results/dryrun_final.json",
+                                            "results/dryrun_all.json"]:
+        if cand and pathlib.Path(cand).exists():
+            f = pathlib.Path(cand)
+            break
+    if f is None:
+        emit("roofline_skipped", 0.0,
+             "no dry-run JSON; run launch.dryrun --all --both")
+        return
+    rows = json.load(f.open())
+    for r in rows:
+        if not r["ok"] or r["mesh"] != "16x16":
+            continue
+        c = r["cost"]
+        flops = c.get("weighted_dot_flops", 0.0)
+        byts = c.get("weighted_bytes_proxy", 0.0)
+        attn = max(c.get("attn_core_bytes", 0) + c.get("score_like_bytes", 0),
+                   c.get("nested_scan_bytes", 0))
+        coll = r["collective_bytes"].get("total", 0)
+        t_c = flops / PEAK
+        t_m = byts / HBM
+        t_mf = max(byts - attn, 0) / HBM
+        t_x = coll / ICI
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        bottleneck = max(terms, key=terms.get)
+        t_bound = max(terms.values())
+        t_bound_fl = max(t_c, t_mf, t_x)
+        kind = r.get("kind", "train")
+        mult = 6 if kind.startswith("train") else 2
+        model_flops = mult * active_params(r["arch"]) \
+            * tokens_per_step(r["shape"]) / r["devices"]
+        ratio = model_flops / max(flops, 1.0)
+        frac = (model_flops / PEAK) / max(t_bound, 1e-12)
+        frac_fl = (model_flops / PEAK) / max(t_bound_fl, 1e-12)
+        emit(f"roofline_{r['arch']}_{r['shape']}", t_bound * 1e6,
+             f"t_comp={t_c:.4f}s;t_mem={t_m:.4f}s;t_mem_fl={t_mf:.4f}s;"
+             f"t_coll={t_x:.4f}s;bottleneck={bottleneck};"
+             f"useful_ratio={min(ratio, 99):.2f};"
+             f"frac={min(frac,1.0):.3f};frac_flash={min(frac_fl,1.0):.3f};"
+             f"hbm_gib={r['memory']['total_hbm_bytes']/2**30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

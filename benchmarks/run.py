@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Emits ``name,us_per_call,derived`` CSV lines (stdout).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("drop_rates", "benchmarks.bench_drop_rates"),            # Fig. 1 / 7
+    ("synthetic_261", "benchmarks.bench_synthetic_261"),      # Fig. 6
+    ("model_layers", "benchmarks.bench_model_layers"),        # Table II
+    ("accel_compare", "benchmarks.bench_accel_compare"),      # Table III
+    ("gan_e2e", "benchmarks.bench_gan_e2e"),                  # Table IV
+    ("perf_model_validation", "benchmarks.bench_perf_model_validation"),  # §V-F
+    ("ablations", "benchmarks.bench_ablations"),              # kernel ablations
+    ("scale_roofline", "benchmarks.bench_scale_roofline"),    # §Roofline
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            __import__(mod, fromlist=["main"]).main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""deepseek-67b — 95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400,
+llama-arch.  [arXiv:2401.02954; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="deepseek-67b",
+    family="dense",
+    source="arXiv:2401.02954; hf",
+    model=ModelConfig(
+        name="deepseek-67b",
+        vocab=102400, d_model=8192, n_layers=95, n_heads=64, kv_heads=8,
+        d_ff=22016, tied_embeddings=False, param_dtype="bfloat16",
+        microbatches=4,
+    ),
+    smoke=ModelConfig(
+        name="deepseek-67b-smoke",
+        vocab=512, d_model=64, n_layers=3, n_heads=4, kv_heads=2,
+        d_ff=128, tied_embeddings=False, remat=False,
+    ),
+    notes="Deepest assigned model (95L) — scan-over-layers keeps compile "
+          "time flat.  Full attention => long_500k skipped.",
+)

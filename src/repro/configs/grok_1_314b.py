@@ -1,0 +1,27 @@
+"""grok-1-314b — 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072,
+MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="grok-1-314b",
+    family="moe",
+    source="hf:xai-org/grok-1; unverified",
+    model=ModelConfig(
+        name="grok-1-314b",
+        vocab=131072, d_model=6144, n_layers=64, n_heads=48, kv_heads=8,
+        head_dim=128, d_ff=32768, n_experts=8, top_k=2,
+        tied_embeddings=True, param_dtype="bfloat16",
+        moe_sharding="fsdp_merged", moe_group_size=1024,
+        microbatches=2,
+        opt_state_dtype="bfloat16",  # 314B: Adam m/v in bf16 to fit HBM
+    ),
+    smoke=ModelConfig(
+        name="grok-1-314b-smoke",
+        vocab=512, d_model=64, n_layers=2, n_heads=4, kv_heads=2,
+        head_dim=16, d_ff=128, n_experts=4, top_k=2, remat=False,
+    ),
+    notes="Largest assigned model; parameters fully sharded over "
+          "(data, model); bf16 params + bf16 Adam state (DESIGN.md §6).",
+)

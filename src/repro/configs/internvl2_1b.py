@@ -1,0 +1,26 @@
+"""internvl2-1b — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655;
+InternViT frontend is a STUB (precomputed patch embeddings) over a
+Qwen2-0.5B-style backbone.  [arXiv:2404.16821; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="internvl2-1b",
+    family="vlm",
+    source="arXiv:2404.16821; hf",
+    model=ModelConfig(
+        name="internvl2-1b",
+        vocab=151655, d_model=896, n_layers=24, n_heads=14, kv_heads=2,
+        d_ff=4864, qkv_bias=True, rope_theta=1e6, tied_embeddings=True,
+        modality="vision", frontend_len=256,
+    ),
+    smoke=ModelConfig(
+        name="internvl2-1b-smoke",
+        vocab=512, d_model=56, n_layers=2, n_heads=4, kv_heads=2,
+        d_ff=128, qkv_bias=True, modality="vision", frontend_len=8,
+        remat=False,
+    ),
+    notes="Vision frontend stubbed: input_specs() provides 256 precomputed "
+          "patch embeddings (B, 256, D) prepended to token embeddings.",
+)

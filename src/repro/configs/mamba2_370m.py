@@ -1,0 +1,25 @@
+"""mamba2-370m — 48L d_model=1024, attention-free SSD, ssm_state=128,
+vocab=50280.  [arXiv:2405.21060; unverified]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="mamba2-370m",
+    family="ssm",
+    source="arXiv:2405.21060; unverified",
+    model=ModelConfig(
+        name="mamba2-370m",
+        vocab=50280, d_model=1024, n_layers=48, pattern=("mamba2",),
+        ssm_head_dim=64, ssm_expand=2, ssm_state=128, ssm_chunk=256,
+        tied_embeddings=True,
+    ),
+    smoke=ModelConfig(
+        name="mamba2-370m-smoke",
+        vocab=512, d_model=64, n_layers=2, pattern=("mamba2",),
+        ssm_head_dim=16, ssm_expand=2, ssm_state=16, ssm_chunk=8,
+        remat=False,
+    ),
+    notes="SSD (state-space duality) chunked scan — linear in L, so the "
+          "long_500k cell RUNS for this arch (sub-quadratic).",
+)

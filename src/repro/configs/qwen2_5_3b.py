@@ -1,0 +1,21 @@
+"""qwen2.5-3b — 36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936,
+QKV bias.  [hf:Qwen/Qwen2.5-0.5B; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="qwen2.5-3b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+    model=ModelConfig(
+        name="qwen2.5-3b",
+        vocab=151936, d_model=2048, n_layers=36, n_heads=16, kv_heads=2,
+        d_ff=11008, qkv_bias=True, rope_theta=1e6, tied_embeddings=True,
+    ),
+    smoke=ModelConfig(
+        name="qwen2.5-3b-smoke",
+        vocab=512, d_model=64, n_layers=2, n_heads=4, kv_heads=2,
+        d_ff=128, qkv_bias=True, remat=False,
+    ),
+)

@@ -1,0 +1,21 @@
+"""qwen2-7b — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064,
+QKV bias.  [arXiv:2407.10671; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="qwen2-7b",
+    family="dense",
+    source="arXiv:2407.10671; hf",
+    model=ModelConfig(
+        name="qwen2-7b",
+        vocab=152064, d_model=3584, n_layers=28, n_heads=28, kv_heads=4,
+        d_ff=18944, qkv_bias=True, rope_theta=1e6, tied_embeddings=False,
+    ),
+    smoke=ModelConfig(
+        name="qwen2-7b-smoke",
+        vocab=512, d_model=56, n_layers=2, n_heads=4, kv_heads=2,
+        d_ff=128, qkv_bias=True, tied_embeddings=False, remat=False,
+    ),
+)

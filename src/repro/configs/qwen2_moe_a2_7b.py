@@ -1,0 +1,27 @@
+"""qwen2-moe-a2.7b — 24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936,
+MoE: 4 shared + 60 routed experts, top-4.  [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf",
+    model=ModelConfig(
+        name="qwen2-moe-a2.7b",
+        vocab=151936, d_model=2048, n_layers=24, n_heads=16, kv_heads=16,
+        d_ff=1408, qkv_bias=True, tied_embeddings=True,
+        n_experts=60, top_k=4, n_shared_experts=4, moe_d_ff=1408,
+        rope_theta=1e6, param_dtype="float32",
+        moe_sharding="replicated_gather", moe_group_size=256,
+    ),
+    smoke=ModelConfig(
+        name="qwen2-moe-a2.7b-smoke",
+        vocab=512, d_model=64, n_layers=2, n_heads=4, kv_heads=4,
+        d_ff=48, qkv_bias=True, n_experts=8, top_k=4, n_shared_experts=2,
+        moe_d_ff=48, remat=False,
+    ),
+    notes="4 always-on shared experts (combined hidden 4*1408=5632) + 60 "
+          "routed top-4; MHA (kv=16).  MM2IM inapplicable (no TCONV).",
+)

@@ -1,0 +1,24 @@
+"""qwen3-32b — 64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936,
+qk_norm.  [hf:Qwen/Qwen3-8B; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="qwen3-32b",
+    family="dense",
+    source="hf:Qwen/Qwen3-8B; hf",
+    model=ModelConfig(
+        name="qwen3-32b",
+        vocab=151936, d_model=5120, n_layers=64, n_heads=64, kv_heads=8,
+        head_dim=128, d_ff=25600, qk_norm=True, rope_theta=1e6,
+        microbatches=4,
+        tied_embeddings=False, param_dtype="bfloat16",
+    ),
+    smoke=ModelConfig(
+        name="qwen3-32b-smoke",
+        vocab=512, d_model=64, n_layers=2, n_heads=4, kv_heads=2,
+        head_dim=16, d_ff=128, qk_norm=True, tied_embeddings=False,
+        remat=False,
+    ),
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-9b — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000; RG-LRU + local attention, 2 recurrent : 1 attn.
+[arXiv:2402.19427; unverified]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    source="arXiv:2402.19427; unverified",
+    model=ModelConfig(
+        name="recurrentgemma-9b",
+        vocab=256000, d_model=4096, n_layers=38,
+        pattern=("rglru", "rglru", "local_attn"), window=2048,
+        n_heads=16, kv_heads=1, head_dim=256, d_ff=12288, mlp_kind="geglu",
+        microbatches=2,
+        tied_embeddings=True,
+    ),
+    smoke=ModelConfig(
+        name="recurrentgemma-9b-smoke",
+        vocab=512, d_model=64, n_layers=5,
+        pattern=("rglru", "rglru", "local_attn"), window=8,
+        n_heads=4, kv_heads=1, head_dim=16, d_ff=128, mlp_kind="geglu",
+        remat=False,
+    ),
+    notes="38 = 12x(rglru,rglru,local_attn) + 2-layer rglru tail.  Bounded "
+          "2048-token window + O(1) recurrent state => long_500k RUNS.",
+)

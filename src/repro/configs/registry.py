@@ -1,0 +1,87 @@
+"""Architecture registry: 10 assigned archs + the paper's own model set.
+
+Each ``src/repro/configs/<id>.py`` defines an :class:`ArchSpec` named
+``arch`` with the exact published configuration (FULL) and a reduced SMOKE
+config for CPU tests.  ``get(name)`` / ``list_archs()`` are the lookup API
+used by the launcher (``--arch <id>``), dry-run, benchmarks and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+# (seq_len, global_batch, kind) — kind: train | prefill | decode
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str               # moe | ssm | audio | hybrid | dense | vlm
+    source: str               # provenance tag from the assignment
+    model: ModelConfig        # FULL published config
+    smoke: ModelConfig        # reduced config for CPU smoke tests
+    notes: str = ""
+
+    def supported_shapes(self) -> Tuple[str, ...]:
+        out = []
+        for shape, (_seq, _bs, kind) in SHAPES.items():
+            if shape == "long_500k" and not self.model.is_subquadratic:
+                continue  # quadratic full attention — skip per DESIGN.md §5
+            out.append(shape)
+        return tuple(out)
+
+
+_ARCH_IDS = (
+    "qwen2_moe_a2_7b", "grok_1_314b", "mamba2_370m", "seamless_m4t_large_v2",
+    "recurrentgemma_9b", "deepseek_67b", "qwen2_5_3b", "qwen2_7b",
+    "qwen3_32b", "internvl2_1b",
+)
+
+_ALIASES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "grok-1-314b": "grok_1_314b",
+    "mamba2-370m": "mamba2_370m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-67b": "deepseek_67b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen2-7b": "qwen2_7b",
+    "qwen3-32b": "qwen3_32b",
+    "internvl2-1b": "internvl2_1b",
+}
+
+_cache: Dict[str, ArchSpec] = {}
+
+
+def get(name: str) -> ArchSpec:
+    key = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if key not in _cache:
+        if key not in _ARCH_IDS:
+            raise KeyError(f"unknown arch {name!r}; known: {list(_ARCH_IDS)}")
+        mod = importlib.import_module(f"repro.configs.{key}")
+        _cache[key] = mod.arch
+    return _cache[key]
+
+
+def list_archs() -> Tuple[str, ...]:
+    return _ARCH_IDS
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) dry-run cell (skips applied) — 32 total."""
+    cells = []
+    for a in _ARCH_IDS:
+        spec = get(a)
+        for s in spec.supported_shapes():
+            cells.append((a, s))
+    return cells

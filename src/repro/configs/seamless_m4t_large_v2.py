@@ -1,0 +1,28 @@
+"""seamless-m4t-large-v2 — enc-dec 24L d_model=1024 16H (kv=16) d_ff=8192
+vocab=256206, multimodal (speech frontend is a STUB: input_specs feeds
+precomputed frame embeddings).  [arXiv:2308.11596; hf]"""
+
+from repro.configs.registry import ArchSpec
+from repro.models.config import ModelConfig
+
+arch = ArchSpec(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    source="arXiv:2308.11596; hf",
+    model=ModelConfig(
+        name="seamless-m4t-large-v2",
+        vocab=256206, d_model=1024, n_layers=24, enc_layers=24,
+        n_heads=16, kv_heads=16, d_ff=8192, mlp_kind="relu",
+        microbatches=2,
+        modality="audio", frontend_len=1024, tied_embeddings=True,
+    ),
+    smoke=ModelConfig(
+        name="seamless-m4t-large-v2-smoke",
+        vocab=512, d_model=64, n_layers=2, enc_layers=2,
+        n_heads=4, kv_heads=4, d_ff=128, mlp_kind="relu",
+        modality="audio", frontend_len=16, remat=False,
+    ),
+    notes="Encoder-decoder backbone only; the speech frontend is a stub — "
+          "encoder consumes precomputed frame embeddings (B, Lenc, D).  "
+          "Decoder runs the decode shapes (has causal self-attn + cross).",
+)

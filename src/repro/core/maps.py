@@ -1,0 +1,160 @@
+"""MM2IM compute/output map generation and IOM-efficiency analytics.
+
+This is the host-side counterpart of the paper's *MM2IM Mapper* (Alg. 2).
+On the accelerator the maps are never materialized (the Pallas kernel derives
+them from compile-time affine arithmetic — DESIGN.md §2); this module exists
+for (a) the oracle / analytics path, (b) the drop-rate figures (Fig. 1/7),
+(c) the tiling planner's ``i_end_row`` relation (Alg. 1), and (d) tests.
+
+Conventions match ``kernels/ref.py``: MatMul row ``m = ih*Iw + iw``; column
+``n = (kh*Ks + kw)*Oc + oc``; target output pixel
+``(S*ih - ct + kh, S*iw - cl + kw)`` with SAME crop ``ct = cl = (Ks-S)//2``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+from repro.kernels.ref import crop_offsets, out_size
+
+
+@dataclasses.dataclass(frozen=True)
+class TConvProblem:
+    """A TCONV problem configuration: tconv(Ih, Iw, Ic, Ks, Oc, S)."""
+
+    ih: int
+    iw: int
+    ic: int
+    ks: int
+    oc: int
+    stride: int
+    padding: str = "SAME"
+
+    @property
+    def oh(self) -> int:
+        return out_size(self.ih, self.ks, self.stride, self.padding)
+
+    @property
+    def ow(self) -> int:
+        return out_size(self.iw, self.ks, self.stride, self.padding)
+
+    # IOM MatMul dimensions (paper §II-B).
+    @property
+    def m(self) -> int:
+        return self.ih * self.iw
+
+    @property
+    def n(self) -> int:
+        return self.ks * self.ks * self.oc
+
+    @property
+    def k(self) -> int:
+        return self.ic
+
+    @property
+    def macs(self) -> int:
+        """MACs of the (unskipped) IOM MatMul: M*N*K."""
+        return self.m * self.n * self.k
+
+    @property
+    def ops(self) -> int:
+        """Paper's 'OPs' convention (Table II): 2 * MACs."""
+        return 2 * self.macs
+
+
+def spatial_maps(p: TConvProblem) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (omap, cmap) over spatial partial products.
+
+    omap: int32 (M, Ks, Ks) — flat output pixel index ``oh*Ow + ow`` for each
+          partial product, or -1 where dropped (the paper's gray squares).
+    cmap: bool  (M, Ks, Ks) — True where the partial product survives.
+
+    Channel dim is omitted: all Oc channels of one (m, kh, kw) cell share the
+    same spatial fate, exactly like the paper's per-row maps broadcast to PMs.
+    """
+    ct, cl = crop_offsets(p.ks, p.stride, p.padding)
+    m = np.arange(p.m)
+    ihs, iws = m // p.iw, m % p.iw
+    kh = np.arange(p.ks)
+    kw = np.arange(p.ks)
+    toh = p.stride * ihs[:, None, None] - ct + kh[None, :, None]
+    tow = p.stride * iws[:, None, None] - cl + kw[None, None, :]
+    valid = (toh >= 0) & (toh < p.oh) & (tow >= 0) & (tow < p.ow)
+    omap = np.where(valid, toh * p.ow + tow, -1).astype(np.int32)
+    return omap, valid
+
+
+def drop_stats(p: TConvProblem) -> dict:
+    """IOM inefficiency metrics from §III-A (Fig. 1/7 and the Fig. 2 example).
+
+    Returns D_o (dropped partial outputs incl. channels), D_r = D_o/(M*N),
+    P_outs = M*N, F_outs = Oc*Oh*Ow, buffer-efficiency ratios, and the
+    effectual MAC count (MACs actually needed after skipping).
+    """
+    _, cmap = spatial_maps(p)
+    kept_spatial = int(cmap.sum())
+    total_spatial = p.m * p.ks * p.ks
+    d_o = (total_spatial - kept_spatial) * p.oc
+    p_outs = p.m * p.n
+    # Paper convention (§III-A2 example): F_outs counts the *uncropped*
+    # col2im buffer a naive implementation must hold (72/32 = 2.25x for
+    # Fig. 2); with crop-skipping only the final cropped outputs remain
+    # (72/8 = 9x for Fig. 2).
+    fh = p.stride * (p.ih - 1) + p.ks
+    fw = p.stride * (p.iw - 1) + p.ks
+    f_outs_full = p.oc * fh * fw
+    f_outs = p.oc * p.oh * p.ow
+    return {
+        "D_o": d_o,
+        "D_r": d_o / p_outs,
+        "P_outs": p_outs,
+        "F_outs": f_outs_full,
+        "F_outs_cropped": f_outs,
+        "buffer_saving_no_skip": p_outs / f_outs_full,
+        "buffer_saving_with_skip": p_outs / f_outs,
+        "effectual_macs": kept_spatial * p.oc * p.ic,
+        "total_macs": p.macs,
+        "effectual_fraction": kept_spatial / total_spatial,
+    }
+
+
+def i_end_row(p: TConvProblem) -> np.ndarray:
+    """Alg. 1's ``i_end_row``: last input row needed for each output row.
+
+    Output row ``oh`` receives contributions from input rows ``ih`` with
+    ``oh = S*ih - ct + kh`` for some ``kh in [0, Ks)`` =>
+    ``ih in [ceil((oh + ct - Ks + 1)/S), floor((oh + ct)/S)]`` (clipped).
+    """
+    ct, _ = crop_offsets(p.ks, p.stride, p.padding)
+    ohs = np.arange(p.oh)
+    last = np.minimum((ohs + ct) // p.stride, p.ih - 1)
+    return last.astype(np.int32)
+
+
+def i_start_row(p: TConvProblem) -> np.ndarray:
+    ct, _ = crop_offsets(p.ks, p.stride, p.padding)
+    ohs = np.arange(p.oh)
+    first = np.maximum(-(-(ohs + ct - p.ks + 1) // p.stride), 0)  # ceil div
+    return first.astype(np.int32)
+
+
+def rows_slab(p: TConvProblem, oh0: int, block_oh: int) -> Tuple[int, int]:
+    """Contiguous input-row range [start, end) feeding output rows
+    [oh0, oh0+block_oh) — the tiled generalization of ``i_end_row``."""
+    oh1 = min(oh0 + block_oh, p.oh) - 1
+    start = int(i_start_row(p)[oh0])
+    end = int(i_end_row(p)[oh1]) + 1
+    return start, end
+
+
+def max_slab_rows(p: TConvProblem, block_oh: int) -> int:
+    """Static upper bound on slab height for any aligned output row block."""
+    best = 0
+    for oh0 in range(0, p.oh, block_oh):
+        s, e = rows_slab(p, oh0, block_oh)
+        best = max(best, e - s)
+    return best

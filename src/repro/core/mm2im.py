@@ -1,0 +1,29 @@
+"""MM2IM — the paper's contribution as a composable JAX module (public API).
+
+    from repro.core import mm2im
+
+    out = mm2im.transposed_conv2d(x, w, bias, stride=2)         # fused kernel
+    stats = mm2im.analyze(mm2im.problem(4, 4, 1024, 5, 512, 2)) # Fig-7 stats
+    plan  = mm2im.tile_plan(problem)                            # Alg.-1 plan
+
+Everything here is differentiable, jit-safe and usable under pjit/shard_map
+(the op is spatially local, so it shards trivially over batch and O_c; the
+GAN configs shard it over ('pod','data') batch and 'model' O_c).
+"""
+
+from __future__ import annotations
+
+from repro.core import maps, perf_model, tiling
+from repro.core.maps import TConvProblem, drop_stats, spatial_maps
+from repro.core.perf_model import ESTIMATORS, V5E, Estimate, modeled_speedup
+from repro.core.tiling import TilePlan, plan as tile_plan
+from repro.kernels.ops import tconv as transposed_conv2d, tconv_int8
+
+problem = TConvProblem
+analyze = drop_stats
+
+__all__ = [
+    "transposed_conv2d", "tconv_int8", "problem", "analyze", "spatial_maps",
+    "tile_plan", "TilePlan", "TConvProblem", "Estimate", "ESTIMATORS",
+    "modeled_speedup", "V5E", "maps", "perf_model", "tiling",
+]

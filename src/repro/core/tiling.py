@@ -1,0 +1,72 @@
+"""Tiled MM2IM planning (paper Alg. 1) — the host-driver role.
+
+Given a TCONV problem and a VMEM budget, produce the full tile plan the
+Pallas kernel executes: output-row block (``block_oh = S*bi``), output
+channel block (``block_oc`` — the ``filter_step`` / #PM analogue), the
+input-row slab geometry (``i_end_row`` relation), grid order, and the
+modeled VMEM footprint.  ``kernels/ops.py`` consumes this implicitly via
+``plan_blocks``; benchmarks and tests consume the explicit plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.maps import TConvProblem, rows_slab
+from repro.core.perf_model import HW, V5E, mm2im_estimate
+from repro.kernels.mm2im_pallas import plan_blocks
+from repro.kernels.ref import crop_offsets
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    problem: TConvProblem
+    block_oh: int
+    block_oc: int
+    n_slab: int
+    n_row_blocks: int
+    n_oc_blocks: int
+    grid_order: str
+    vmem_bytes: int
+    halo_overhead: float  # recomputed-slab fraction vs ideal (dense-MXU cost)
+
+    def describe(self) -> str:
+        p = self.problem
+        return (f"tconv({p.ih},{p.iw},{p.ic},{p.ks},{p.oc},{p.stride}) "
+                f"block_oh={self.block_oh} block_oc={self.block_oc} "
+                f"slab={self.n_slab} grid={self.grid_order} "
+                f"vmem={self.vmem_bytes/2**20:.2f}MiB halo=+{self.halo_overhead:.0%}")
+
+
+def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E) -> TilePlan:
+    ebytes = bits // 8
+    block_oh, block_oc = plan_blocks(
+        p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
+        vmem_budget=int(hw.vmem_bytes * 0.75), in_bytes=ebytes)
+    s = p.stride
+    bi = block_oh // s
+    ct, _ = crop_offsets(p.ks, s, p.padding)
+    delta = -(-max(p.ks - 1 - ct, 0) // s)
+    eps = (ct - 1) // s
+    n_slab = bi + delta + eps + 1
+    n_j = -(-p.oh // block_oh)
+    n_c = -(-p.oc // block_oc)
+    ihp = (n_j - 1) * bi + n_slab
+    ow_p = -(-p.ow // s) * s
+
+    w_bytes = p.ic * p.ks**2 * n_c * block_oc * ebytes
+    x_bytes = batch * ihp * p.iw * p.ic * ebytes
+    grid_order = "cbj" if w_bytes > x_bytes else "bcj"
+
+    vmem = (ihp * p.iw * p.ic * ebytes                      # resident input
+            + p.ic * p.ks**2 * block_oc * ebytes            # weight block
+            + 2 * n_slab * p.iw * p.ks**2 * block_oc * 4    # mm + acc dbl-buf
+            + 2 * block_oh * ow_p * block_oc * 4)
+    halo = (n_j * n_slab) / max(p.ih, 1) - 1.0
+    return TilePlan(p, block_oh, block_oc, n_slab, n_j, n_c, grid_order,
+                    vmem, max(halo, 0.0))
+
+
+def slab_table(p: TConvProblem, block_oh: int) -> list[tuple[int, int]]:
+    """Per-row-block (start, end) input slab ranges — Alg. 1's i_end_row."""
+    return [rows_slab(p, oh0, block_oh) for oh0 in range(0, p.oh, block_oh)]

@@ -1,0 +1,60 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 512+ chips the pod-to-pod gradient reduction crosses slow DCN links;
+int8 error-feedback compression cuts that traffic ~4x (vs f32) at
+negligible quality cost — the quantization error is carried to the next
+step (Seide et al. 2014 / 1-bit Adam lineage).
+
+Mechanics: the train step computes *pod-local* gradients under
+``shard_map`` that is manual over 'pod' and automatic over (data, model)
+(``axis_names`` subset).  Each pod quantizes (per-tensor max-abs scale),
+all-gathers the int8 payload + f32 scalar scales over 'pod', dequantizes
+the mean, and feeds the residual back.  Intra-pod reductions stay full
+precision (fast ICI).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pod_mean_int8(g: jax.Array, e: jax.Array, axis: str = "pod"):
+    """Inside shard_map (manual over `axis`): error-feedback int8 mean.
+
+    Returns (mean over pods, new local error).  Cross-pod traffic is the
+    int8 payload + one f32 scalar per tensor (4x less than f32 psum).
+    """
+    x = g.astype(jnp.float32) + e
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis)       # (n_pods, ...) int8 traffic
+    scales = jax.lax.all_gather(scale, axis)
+    mean = jnp.tensordot(scales, qs.astype(jnp.float32), axes=(0, 0)) \
+        / scales.shape[0]
+    err_new = x - q.astype(jnp.float32) * scale
+    return mean.astype(g.dtype), err_new
+
+
+def pod_mean_exact(g: jax.Array, axis: str = "pod"):
+    return jax.lax.pmean(g, axis)
+
+
+def tree_pod_mean_int8(grads: Any, err: Any, axis: str = "pod"):
+    """Apply pod_mean_int8 leaf-wise (call under manual-'pod' shard_map)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [pod_mean_int8(g, e, axis) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def init_error_state(params_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), params_like)

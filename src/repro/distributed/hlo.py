@@ -1,0 +1,451 @@
+"""HLO analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective bytes;
+we parse the post-SPMD HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(+ their -start async forms), per the assignment's §Roofline instructions.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[16,128]{1,0}" or "bf16[2,4096,512]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# instruction def: "%name = TYPE opcode(...)"  (TYPE may be a tuple)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+# computation header: "%name (params...) -> type {" / "ENTRY %name ...{"
+# (param lists contain nested parens — match only the leading name).
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def _parse_computations(hlo_text: str):
+    """Split module text into {computation: [instruction lines]}."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Collective traffic per kind, weighting while-bodies by trip count.
+
+    Operand sizes are resolved through a per-computation def map (compiled
+    HLO prints operands without types); scan-over-layers bodies multiply by
+    ``known_trip_count`` from the backend config.  Returns bytes *per
+    device per step* (SPMD module shapes are per-device).
+    """
+    comps = _parse_computations(hlo_text)
+    # name -> result bytes, per computation (fallback to global map).
+    defs: Dict[str, Dict[str, int]] = {}
+    glob: Dict[str, int] = {}
+    body_trip: Dict[str, int] = {}
+    per_comp: Dict[str, Dict[str, int]] = {}
+
+    for cname, lines in comps.items():
+        dmap: Dict[str, int] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                nbytes = _type_bytes(dm.group(2))
+                dmap[dm.group(1)] = nbytes
+                glob[dm.group(1)] = nbytes
+            if " while(" in line:
+                wb = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wb:
+                    body_trip[wb.group(1)] = int(tm.group(1)) if tm else 1
+        defs[cname] = dmap
+
+    for cname, lines in comps.items():
+        counts: Dict[str, int] = defaultdict(int)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            op = dm.group(3)
+            base = op[:-6] if op.endswith("-start") else op
+            if base not in _COLLECTIVES:
+                continue
+            operands = line[dm.end():]  # dm ends just past the op's '('
+            depth = 1
+            for i, ch in enumerate(operands):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        operands = operands[:i]
+                        break
+            nbytes = 0
+            for on in _OPERAND_RE.findall(operands):
+                nbytes += defs[cname].get(on, glob.get(on, 0))
+            counts[base] += nbytes
+            counts["total"] += nbytes
+        per_comp[cname] = dict(counts)
+
+    # Weight computations: entry = 1; while bodies = product of trip counts
+    # (nested whiles resolved by fixpoint iteration).
+    weight = {c: 1 for c in comps}
+    for _ in range(4):
+        for body, trips in body_trip.items():
+            # find which computation contains the while referencing body
+            for cname, lines in comps.items():
+                if any(f"body=%{body}" in ln for ln in lines):
+                    weight[body] = weight.get(cname, 1) * trips
+    # Computations that are only reachable from while bodies (e.g. nested
+    # fusion comps) carry no collectives of their own in practice.
+    total: Dict[str, int] = defaultdict(int)
+    for cname, counts in per_comp.items():
+        w = weight.get(cname, 1)
+        for k, v in counts.items():
+            total[k] += v * w
+    return dict(total)
+
+
+_SHAPE_FULL_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+
+def _dims(type_str: str):
+    m = _SHAPE_FULL_RE.search(type_str)
+    if not m:
+        return None, None
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+    return dt, shape
+
+
+def weighted_cost(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-weighted per-device FLOPs and HBM-byte proxy.
+
+    ``compiled.cost_analysis()`` counts each while body ONCE; with
+    scan-over-layers that understates work by n_layers.  Here:
+
+      * dot FLOPs: 2 * prod(result dims) * prod(lhs contracting dims),
+        weighted by the enclosing computation's trip-count product.
+      * bytes: operand + result sizes of every *top-level* (fused)
+        instruction — a proxy for HBM traffic of each fused kernel.
+
+    Elementwise FLOPs outside dots are not counted (dots dominate LM
+    steps); the unweighted cost_analysis() number is reported alongside.
+    """
+    comps = _parse_computations(hlo_text)
+    shapes: Dict[str, tuple] = {}
+    body_trip: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = _dims(dm.group(2))
+            if " while(" in line:
+                wb = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wb:
+                    body_trip[wb.group(1)] = int(tm.group(1)) if tm else 1
+
+    weight = {c: 1 for c in comps}
+    for _ in range(4):
+        for body, trips in body_trip.items():
+            for cname, lines in comps.items():
+                if any(f"body=%{body}" in ln for ln in lines):
+                    weight[body] = weight.get(cname, 1) * trips
+
+    flops = 0.0
+    byts = 0.0
+    for cname, lines in comps.items():
+        w = weight.get(cname, 1)
+        # Skip fusion sub-computations for the bytes proxy: only reduce
+        # double counting for computations called as fusions (heuristic:
+        # name starts with 'fused_' / 'region_' / wrapped_).
+        is_sub = cname.startswith(("fused_", "wrapped_", "region_")) \
+            or ".clone" in cname and "wide." not in cname
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, tstr, op = dm.groups()
+            if op == "dot":
+                _, rshape = _dims(tstr)
+                ons = _OPERAND_RE.findall(line[dm.end():].split(")")[0])
+                lc = _DIMS_RE["lhs_c"].search(line)
+                k = 1
+                if ons and lc and ons[0] in shapes:
+                    _, lshape = shapes[ons[0]]
+                    if lshape:
+                        for d in (int(x) for x in lc.group(1).split(",") if x):
+                            if d < len(lshape):
+                                k *= lshape[d]
+                if rshape is not None:
+                    n = 1
+                    for d in rshape:
+                        n *= d
+                    flops += w * 2.0 * n * k
+            elif op == "convolution":
+                # rare outside GAN models; approximate 2*out*K — skipped
+                pass
+            # HBM-byte proxy: count only ops that are real kernel
+            # boundaries on TPU (fusions, dots, convs, data-movement
+            # collectives, scatter/gather/dus).  Pure layout/plumbing ops
+            # (copy/transpose/bitcast/broadcast/reshape/convert/iota) are
+            # fused or elided by the TPU compiler and would over-count
+            # traffic by 3-20x if included (measured on the 32-cell sweep).
+            countable = op == "fusion" or op == "dot" or op == "convolution" \
+                or op in _COLLECTIVES or op.endswith("-start") \
+                or op in ("dynamic-slice", "dynamic-update-slice", "gather",
+                          "scatter", "reduce", "reduce-window", "sort",
+                          "select-and-scatter", "concatenate", "pad")
+            if not is_sub and countable:
+                nb = _type_bytes(tstr)
+                ons = _OPERAND_RE.findall(line[dm.end():].split("),")[0])
+                for on in ons:
+                    dt_sh = shapes.get(on)
+                    if dt_sh and dt_sh[1] is not None:
+                        sz = 1
+                        for d in dt_sh[1]:
+                            sz *= d
+                        nb += sz * _DTYPE_BYTES.get(dt_sh[0], 4)
+                byts += w * nb
+    return {"weighted_dot_flops": flops, "weighted_bytes_proxy": byts}
+
+
+def scoped_bytes(hlo_text: str, scope: str = "attn_core") -> float:
+    """Trip-weighted byte proxy restricted to ops whose op_name metadata
+    contains ``scope`` (set via jax.named_scope in the model code).
+
+    Used for the flash-attention roofline correction: the Pallas kernel
+    keeps everything inside the ``attn_core`` scope in VMEM, so the
+    corrected memory term is (weighted_bytes_proxy - scoped_bytes + the
+    kernel's q/k/v/o HBM I/O, which the surrounding dots already count).
+    """
+    comps = _parse_computations(hlo_text)
+    shapes: Dict[str, tuple] = {}
+    body_trip: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = _dims(dm.group(2))
+            if " while(" in line:
+                wb = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wb:
+                    body_trip[wb.group(1)] = int(tm.group(1)) if tm else 1
+    weight = {c: 1 for c in comps}
+    for _ in range(4):
+        for body, trips in body_trip.items():
+            for cname, lines in comps.items():
+                if any(f"body=%{body}" in ln for ln in lines):
+                    weight[body] = weight.get(cname, 1) * trips
+    total = 0.0
+    for cname, lines in comps.items():
+        w = weight.get(cname, 1)
+        is_sub = cname.startswith(("fused_", "wrapped_", "region_")) \
+            or ".clone" in cname and "wide." not in cname
+        if is_sub:
+            continue
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm or scope not in line:
+                continue
+            op = dm.group(3)
+            countable = op in ("fusion", "dot", "convolution",
+                               "dynamic-slice", "dynamic-update-slice",
+                               "gather", "scatter", "reduce", "concatenate",
+                               "pad") or op in _COLLECTIVES
+            if not countable:
+                continue
+            nb = _type_bytes(dm.group(2))
+            ons = _OPERAND_RE.findall(line[dm.end():].split("),")[0])
+            for on in ons:
+                dt_sh = shapes.get(on)
+                if dt_sh and dt_sh[1] is not None:
+                    sz = 1
+                    for d in dt_sh[1]:
+                        sz *= d
+                    nb += sz * _DTYPE_BYTES.get(dt_sh[0], 4)
+            total += w * nb
+    return total
+
+
+def score_like_bytes(hlo_text: str, min_dim: int = 512) -> float:
+    """Weighted bytes of *untagged* ops whose result is attention-score
+    shaped (rank >= 4 with both trailing dims >= min_dim).  XLA drops the
+    op_name metadata on some fused score chains; this catches them for the
+    flash-correction (see scoped_bytes).  Verified against the tagged set:
+    no overlap (only ops without 'attn_core' in their line are counted)."""
+    comps = _parse_computations(hlo_text)
+    body_trip: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                wb = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wb:
+                    body_trip[wb.group(1)] = int(tm.group(1)) if tm else 1
+    weight = {c: 1 for c in comps}
+    for _ in range(4):
+        for body, trips in body_trip.items():
+            for cname, lines in comps.items():
+                if any(f"body=%{body}" in ln for ln in lines):
+                    weight[body] = weight.get(cname, 1) * trips
+    total = 0.0
+    for cname, lines in comps.items():
+        w = weight.get(cname, 1)
+        is_sub = cname.startswith(("fused_", "wrapped_", "region_")) \
+            or ".clone" in cname and "wide." not in cname
+        if is_sub:
+            continue
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm or "attn_core" in line:
+                continue
+            op = dm.group(3)
+            if op not in ("fusion", "dot", "reduce", "pad", "concatenate"):
+                continue
+            dt, shape = _dims(dm.group(2))
+            if shape is None or len(shape) < 4:
+                continue
+            if shape[-1] >= min_dim and shape[-2] >= min_dim:
+                total += w * _type_bytes(dm.group(2))
+    return total
+
+
+def nested_scan_bytes(hlo_text: str) -> float:
+    """Weighted bytes inside *nested* while loops (weight > any single
+    trip count).  In this framework the only nested scans are the chunked
+    attention's (q-chunk x kv-chunk) loops inside the layer scan, so this
+    is a structural attribution of attention-interior traffic — the part
+    a flash kernel keeps in VMEM."""
+    comps = _parse_computations(hlo_text)
+    shapes: Dict[str, tuple] = {}
+    body_trip: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = _dims(dm.group(2))
+            if " while(" in line:
+                wb = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wb:
+                    body_trip[wb.group(1)] = int(tm.group(1)) if tm else 1
+    if not body_trip:
+        return 0.0
+    weight = {c: 1 for c in comps}
+    for _ in range(4):
+        for body, trips in body_trip.items():
+            for cname, lines in comps.items():
+                if any(f"body=%{body}" in ln for ln in lines):
+                    weight[body] = weight.get(cname, 1) * trips
+    max_single = max(body_trip.values())
+    total = 0.0
+    for cname, lines in comps.items():
+        w = weight.get(cname, 1)
+        if w <= max_single:
+            continue  # not a nested-scan interior
+        is_sub = cname.startswith(("fused_", "wrapped_", "region_")) \
+            or ".clone" in cname and "wide." not in cname
+        if is_sub:
+            continue
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            op = dm.group(3)
+            countable = op in ("fusion", "dot", "convolution",
+                               "dynamic-slice", "dynamic-update-slice",
+                               "gather", "scatter", "reduce", "reduce-window",
+                               "concatenate", "pad") or op in _COLLECTIVES
+            if not countable:
+                continue
+            nb = _type_bytes(dm.group(2))
+            ons = _OPERAND_RE.findall(line[dm.end():].split("),")[0])
+            for on in ons:
+                dt_sh = shapes.get(on)
+                if dt_sh and dt_sh[1] is not None:
+                    sz = 1
+                    for d in dt_sh[1]:
+                        sz *= d
+                    nb += sz * _DTYPE_BYTES.get(dt_sh[0], 4)
+            total += w * nb
+    return total
+
+
+def collective_count(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        dm = _DEF_RE.match(line)
+        if dm:
+            op = dm.group(3)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                out[base] += 1
+    return dict(out)
+
+
+def flops_and_bytes(compiled) -> Dict[str, float]:
+    """Pull FLOPs / bytes-accessed from compiled.cost_analysis() (robust to
+    the dict / list-of-dict API variants across jax versions)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": byts, "raw_keys": len(ca)}
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0) or 0)
+    # Donated inputs alias outputs — count them once (true live peak).
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,119 @@
+"""Sharding utilities: spec->sharding trees, activation constraints (SP).
+
+Activation sharding (sequence parallelism) is applied *inside* the model
+via :func:`shard_activations`; it resolves the current mesh lazily and
+silently no-ops on meshless (CPU smoke) traces, so model code stays
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Set by the step builders; read by model-internal constraints.
+_HINTS: dict = {"batch": ("data",), "seq": None, "enabled": False}
+
+
+def set_activation_hints(*, batch_axes=("data",), seq_axis: Optional[str] = None,
+                         enabled: bool = True):
+    _HINTS.update(batch=tuple(batch_axes), seq=seq_axis, enabled=enabled)
+
+
+def _mesh_axes() -> tuple:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return tuple(m.axis_names) if m is not None else ()
+    except Exception:
+        return ()
+
+
+def _mesh_shape() -> dict:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return dict(m.shape) if m is not None else {}
+    except Exception:
+        return {}
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that drops axes the mesh lacks and axes
+    whose size does not divide the corresponding array dimension."""
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    sizes = _mesh_shape()
+    flat = []
+    for i, part in enumerate(spec):
+        dim = x.shape[i] if i < x.ndim else 1
+        if part is None:
+            flat.append(None)
+            continue
+        cand = part if isinstance(part, tuple) else (part,)
+        kept, prod = [], 1
+        for a in cand:
+            n = sizes.get(a, 0)
+            if a in axes and n and dim % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        flat.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*flat))
+    except Exception:
+        return x
+
+
+def shard_activations(x):
+    """Constrain a (B, L, D) residual-stream tensor: batch over DP axes and
+    (optionally) sequence over the TP axis — Megatron-SP style.  The
+    compiler inserts the all-gather at attention Q/K/V and reduce-scatter
+    after o_proj/mlp automatically."""
+    if not _HINTS["enabled"]:
+        return x
+    seq = _HINTS["seq"] if x.ndim >= 3 and x.shape[1] > 1 else None
+    if x.ndim == 3:
+        return constrain(x, P(_HINTS["batch"], seq, None))
+    if x.ndim == 2:
+        return constrain(x, P(_HINTS["batch"], None))
+    return x
+
+
+def tree_shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree.
+
+    ``None`` is preserved as an *empty subtree* (jax pytree semantics) so
+    structures with optional components (e.g. Cache.tail) keep matching.
+    Replicated leaves must therefore be spelled ``P()``, not ``None``.
+    """
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_pspec(mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def pad_specs_for_mesh(spec_tree, mesh):
+    """Drop mesh axes that don't exist (e.g. 'pod' specs on single-pod)."""
+    axes = set(mesh.axis_names)
+
+    def fix(s):
+        out = []
+        for part in s:
+            if part is None:
+                out.append(None)
+            elif isinstance(part, tuple):
+                kept = tuple(a for a in part if a in axes)
+                out.append(kept if kept else None)
+            else:
+                out.append(part if part in axes else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,115 @@
+"""The paper's comparison TCONV methods, implemented in pure JAX.
+
+* :func:`zero_insertion_tconv` — §II-A method (i): interior-pad the input
+  with S-1 zeros and run a plain convolution with the flipped kernel.
+  ~75% of MACs multiply inserted zeros (the overhead the paper cites [11]).
+* :func:`tdc_tconv` — §II-A method (ii): Transforming Deconvolution to
+  Convolution.  Decomposes the TCONV into S^2 stride-residue sub-filters,
+  computes S^2 small dense convolutions, and interleaves the results.
+  MAC-optimal but pays the sub-filter transformation + output interleave
+  (the overhead the paper cites [8]).
+* The unfused IOM baseline (MatMul -> HBM -> scatter col2im) lives in
+  ``ref.iom_reference``.
+
+All agree bit-for-bit (up to fp accumulation order) with ``ref.tconv_lax``;
+tests sweep them jointly.  Benchmarks use them for the Table-III-style
+method comparison on TPU terms (effectual-FLOP ratio / MXU utilization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ref import crop_offsets, out_size
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def zero_insertion_tconv(x, w, *, stride: int, padding: str = "SAME"):
+    """TCONV via zero insertion + dense convolution (method (i))."""
+    b, ih, iw, ic = x.shape
+    ks, _, oc, _ = w.shape
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+    xf = x.astype(jnp.float32)
+    xd = lax.pad(xf, jnp.float32(0),
+                 [(0, 0, 0), (0, 0, s - 1), (0, 0, s - 1), (0, 0, 0)])
+    w_f = jnp.transpose(w, (0, 1, 3, 2))[::-1, ::-1].astype(jnp.float32)
+    # Full-size conv then crop == SAME TCONV. padding (Ks-1) both sides.
+    full = lax.conv_general_dilated(
+        xd, w_f, (1, 1), [(ks - 1, ks - 1), (ks - 1, ks - 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return lax.dynamic_slice(full, (0, ct, cl, 0), (b, oh, ow, oc))
+
+
+def zero_insertion_macs(ih, iw, ic, ks, oc, stride, padding="SAME") -> int:
+    """MACs a dense conv engine performs under zero-insertion."""
+    oh = out_size(ih, ks, stride, padding)
+    ow = out_size(iw, ks, stride, padding)
+    return oh * ow * ks * ks * ic * oc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def tdc_tconv(x, w, *, stride: int, padding: str = "SAME"):
+    """TCONV via TDC: S^2 stride-residue sub-convolutions (method (ii)).
+
+    For output residue class (a, b) mod S:
+        out[S*q + a, S*p + b] = sum_{t,u} x[q + gh - t, p + gw - u]
+                                          * w[S*t + rh, S*u + rw]
+    with rh = (a + ct) % S, gh = (a + ct) // S  (similarly for width).
+    """
+    bsz, ih, iw, ic = x.shape
+    ks, _, oc, _ = w.shape
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+    xf = x.astype(jnp.float32)
+
+    n_qh = -(-oh // s)  # sub-output rows per residue
+    n_qw = -(-ow // s)
+    outs = []
+    for a in range(min(s, oh)):
+        row = []
+        rh, gh = (a + ct) % s, (a + ct) // s
+        nth = (ks - 1 - rh) // s + 1  # sub-filter height
+        for b in range(min(s, ow)):
+            rw, gw = (b + cl) % s, (b + cl) // s
+            ntw = (ks - 1 - rw) // s + 1
+            # Sub-filter, flipped in t/u to express the sum as a conv.
+            sub = w[rh::s, rw::s][::-1, ::-1]  # (nth, ntw, oc, ic)
+            sub = jnp.transpose(sub, (0, 1, 3, 2))  # HWIO
+            # out_sub[q] = sum_t' x[q + t' - (nth-1-gh)] * flipped_sub[t']
+            # => conv padding: pad_lo = nth-1-gh; out length n_qh fixes pad_hi.
+            pad_h = (nth - 1 - gh, n_qh - ih + gh)
+            pad_w = (ntw - 1 - gw, n_qw - iw + gw)
+            sub_out = lax.conv_general_dilated(
+                xf, sub.astype(jnp.float32), (1, 1), [pad_h, pad_w],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            row.append(sub_out)  # (B, n_qh, n_qw, oc)
+        outs.append(jnp.stack(row, axis=3))  # (B, n_qh, n_qw, s_w, oc)
+    grid = jnp.stack(outs, axis=2)  # (B, n_qh, s_h, n_qw, s_w, oc)
+    full = grid.reshape(bsz, n_qh * grid.shape[2], n_qw * grid.shape[4], oc)
+    return full[:, :oh, :ow, :]
+
+
+def tdc_macs(ih, iw, ic, ks, oc, stride, padding="SAME") -> int:
+    """MACs performed by the TDC decomposition (== effectual MACs + edge pad)."""
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+    total = 0
+    for a in range(min(s, oh)):
+        rh = (a + ct) % s
+        nth = (ks - 1 - rh) // s + 1
+        for b in range(min(s, ow)):
+            rw = (b + cl) % s
+            ntw = (ks - 1 - rw) // s + 1
+            total += (-(-oh // s)) * (-(-ow // s)) * nth * ntw * ic * oc
+    return total

@@ -1,0 +1,141 @@
+"""Flash attention (forward) as a Pallas TPU kernel — GQA + causal + window.
+
+Motivation (EXPERIMENTS.md §Perf, hillclimb B): at 32k prefill the pure-JAX
+chunked attention writes O(B·H·L²) score tensors through HBM — the
+dominant roofline term for every *_prefill_32k cell (e.g. deepseek-67b:
+t_mem ≈ 766 s vs t_comp ≈ 37 s).  Holding the running softmax state in
+VMEM removes that traffic entirely; the layer becomes compute-bound.
+
+Structure (canonical TPU flash):
+  grid = (batch, q_heads, q_blocks, kv_blocks)   — kv innermost
+  q block    (1, 1, bq, hd)   stationary across the kv sweep
+  k/v blocks (1, 1, bk, hd)   indexed by kv step; GQA maps q-head h to
+                              kv-head h // (H/Hkv) inside the index_map
+  out block  (1, 1, bq, hd)   written once, on the last *contributing* step
+  VMEM scratch: m (bq,1), s (bq,1), acc (bq, hd) — survives the kv sweep
+
+Causality is exploited at *block* granularity: kv blocks strictly above
+the diagonal are predicated off with ``pl.when`` (no MXU work issued) —
+the same tile-level skip discipline as the MM2IM cmap (DESIGN.md §2).
+Validated in interpret mode against ``layers.attention.attend``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr, *,
+                  bq: int, bk: int, n_k: int, l_q: int, l_k: int,
+                  scale: float, causal: bool, window: Optional[int]):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level cmap: does this kv block contribute to this q block?
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < l_k
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        sc = jnp.where(mask, sc, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]                         # (bq,)
+        m_new = jnp.maximum(m_prev, sc.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        s_scr[...] = (s_scr[...][:, 0] * alpha + p.sum(axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        s = jnp.maximum(s_scr[...][:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / s[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Lq, H, hd)
+    k: jax.Array,   # (B, Lk, Hkv, hd)
+    v: jax.Array,   # (B, Lk, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention forward.  Returns (B, Lq, H, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, l_q, h, hd = q.shape
+    _, l_k, hkv, _ = k.shape
+    assert h % hkv == 0
+    r = h // hkv
+    bq = min(block_q, l_q)
+    bk = min(block_k, l_k)
+    n_q = -(-l_q // bq)
+    n_k = -(-l_k // bk)
+    lq_p, lk_p = n_q * bq, n_k * bk
+
+    qt = jnp.pad(q, ((0, 0), (0, lq_p - l_q), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, lk_p - l_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, lk_p - l_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_k=n_k, l_q=l_q, l_k=l_k,
+        scale=1.0 / (hd ** 0.5), causal=causal, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, qi, ki, r=r: (b_, h_ // r, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, qi, ki, r=r: (b_, h_ // r, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)[:, :l_q]

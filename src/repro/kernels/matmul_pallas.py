@@ -1,0 +1,70 @@
+"""Tiled MXU matmul Pallas kernel — the dense-MatMul perf control.
+
+Used by benchmarks as the "pure MatMul" reference point for the IOM
+pipeline (the unfused baseline = this + a scatter pass) and as a
+standalone primitive.  Canonical 3-D blocked schedule:
+
+  grid = (M/bm, N/bn, K/bk)   — K innermost (revisiting accumulation)
+  A block (bm, bk), B block (bk, bn), out block (bm, bn) revisited across
+  the K sweep with a VMEM f32 scratch accumulator.
+
+Validated against jnp.dot in interpret mode (f32/bf16/int8 paths).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
+           block_n: int = 256, block_k: int = 256,
+           out_dtype=None, interpret: Optional[bool] = None) -> jax.Array:
+    """a (M, K) @ b (K, N) with explicit MXU tiling."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    integer = jnp.issubdtype(a.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    out_dtype = out_dtype or (jnp.int32 if integer else a.dtype)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    a_p = jnp.pad(a, ((0, gm * bm - m), (0, gk * bk - k)))
+    b_p = jnp.pad(b, ((0, gk * bk - k), (0, gn * bn - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=gk, out_dtype=out_dtype),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,292 @@
+"""MM2IM — fused MatMul + col2im transposed convolution, as a Pallas TPU kernel.
+
+This is the TPU-native adaptation of the paper's accelerator (DESIGN.md §2):
+
+* **Tiled MM2IM (Alg. 1)** -> the Pallas ``grid = (batch, O_h row-blocks,
+  O_c blocks)``.  Each grid cell is *weight-stationary* in its O_c block
+  (``filter_step`` == ``block_oc``) and *output-stationary* in a VMEM
+  accumulator holding ``block_oh`` complete output rows.  The contiguous
+  input-row slab needed per output row-block (the ``i_end_row`` relation) is
+  loaded with a dynamic VMEM slice — the analogue of ``SendInputRows``.
+
+* **MM2IM Mapper (Alg. 2)** -> compile-time affine arithmetic.  For a fixed
+  kernel offset ``(kh, kw)`` every partial product lands at
+  ``oh = S*ih - ct + kh``, ``ow = S*iw - cl + kw``; the kernel unrolls the
+  ``Ks^2`` offsets and turns cmap/omap into *static slice bounds* — zero
+  bytes of map traffic (the paper's third key insight, taken to its limit).
+
+* **Out-Muxer / overlapping sums** -> the accumulator is viewed as
+  ``(bi, S, Iw', S, boc)`` so each ``(kh, kw)`` contribution is one static
+  strided-slice add (stride-``S`` residue decomposition).  Overlaps
+  accumulate in VMEM; every final output is written to HBM exactly once and
+  **no partial product is ever materialized in HBM** (paper P2/P3).
+
+* **cmap skip of cropped outputs** -> ``(kh, kw)`` terms whose target range
+  misses the current output block are skipped *at trace time* (no vector op
+  is ever issued), and the MatMul only covers the contributing input-row
+  slab.  Residual dense-tile waste relative to the paper's per-element PE
+  gating is accounted for in ``core/perf_model.py`` (dense-MXU reality).
+
+The kernel supports f32 / bf16 inputs (f32 accumulation) and the paper's
+8-bit mode (int8 x int8 -> int32 accumulation, optional requantization), and
+fuses the PPU epilogue (bias + activation + requant).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import crop_offsets, out_size
+
+_ACTIVATIONS: dict[str, Callable] = {
+    "relu": lambda x: jnp.maximum(x, 0),
+    "tanh": jnp.tanh,
+    "leaky_relu": lambda x: jnp.where(x >= 0, x, 0.2 * x),
+    "none": lambda x: x,
+}
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def plan_blocks(
+    ih: int, iw: int, ic: int, ks: int, oc: int, stride: int, padding: str,
+    *, vmem_budget: int = 12 * 2**20, in_bytes: int = 4,
+) -> tuple[int, int]:
+    """Pick (block_oh, block_oc) within a VMEM budget.
+
+    block_oh = S * bi (aligned so the input slab per block is a static-size
+    contiguous row range); block_oc tiles the N dimension of the MatMul.
+    This is the host-driver role of the paper's 0x01 Configure instruction.
+    """
+    s = stride
+    ct, _ = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+    ow_p = _ceil_div(ow, s) * s
+    delta = _ceil_div(max(ks - 1 - ct, 0), s)
+    eps = (ct - 1) // s
+
+    def vmem(bi: int, boc: int) -> int:
+        n_slab = bi + delta + eps + 1
+        x_whole = (min(_ceil_div(oh, s * bi), _ceil_div(ih, bi)) * bi + delta + eps + 1) * iw * ic * in_bytes
+        w_blk = ic * ks * ks * boc * in_bytes
+        mm = n_slab * iw * ks * ks * boc * 4
+        acc = s * bi * ow_p * boc * 4
+        return x_whole + w_blk + 2 * mm + 2 * acc
+
+    # Prefer large bi (amortizes halo recompute) and boc giving N-block >= 128.
+    best = None
+    for boc in sorted({min(oc, b) for b in (8, 16, 32, 64, 128, 256)}, reverse=True):
+        if ks * ks * boc > 4096 and boc > 8:
+            continue
+        for bi in (64, 32, 16, 8, 4, 2, 1):
+            if s * bi > max(oh, s):
+                continue
+            if vmem(bi, boc) <= vmem_budget:
+                cand = (s * bi, boc)
+                if best is None or (bi * boc) > (best[0] // s) * best[1]:
+                    best = cand
+                break
+    if best is None:
+        best = (s, min(oc, 8))
+    return best
+
+
+def _mm2im_kernel(
+    x_ref, w_ref, b_ref, s_ref, o_ref, *,
+    s: int, ks: int, ct: int, cl: int,
+    bi: int, n_slab: int, iw: int, ow: int, ow_p: int, boc: int,
+    delta: int, acc_dtype, out_dtype, activation: str, out_scale,
+    per_channel: bool,
+):
+    """One grid cell: output rows [j*S*bi, (j+1)*S*bi) x channels [c*boc, ...).
+
+    Grid order is (batch, oc-block, oh-block) — the paper's Alg. 1 loop nest:
+    weight-stationary across the inner output-row sweep (the w block index is
+    constant while j advances, so Pallas keeps it resident in VMEM), and the
+    whole-input block is resident for an entire batch element.
+    """
+    j = pl.program_id(2)  # inner output-row sweep (both grid orders)
+
+    # --- SendInputRows: the contiguous slab feeding this output row-block.
+    slab = x_ref[0, pl.dslice(j * bi, n_slab)]  # (n_slab, iw, ic)
+    ic = slab.shape[-1]
+
+    # --- IOM MatMul on the MXU: (n_slab*iw, ic) @ (ic, ks*ks*boc).
+    wb = w_ref[...].reshape(ic, ks * ks * boc)
+    mm = jax.lax.dot_general(
+        slab.reshape(n_slab * iw, ic), wb,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    mm5 = mm.reshape(n_slab, iw, ks, ks, boc)
+
+    # --- col2im: output-stationary accumulator, residue-decomposed adds.
+    block_oh = s * bi
+    iw_p = ow_p // s
+    acc = jnp.zeros((bi, s, iw_p, s, boc), acc_dtype)
+    for kh in range(ks):
+        phi_h = kh - ct - s * delta
+        a, qh = phi_h % s, (phi_h - (phi_h % s)) // s
+        r0 = 0 if phi_h >= 0 else _ceil_div(-phi_h, s)
+        r1 = min(n_slab, (block_oh - 1 - phi_h) // s + 1)
+        if r1 <= r0:
+            continue  # cmap: entire kh row cropped for every block — skip.
+        for kw in range(ks):
+            phi_w = kw - cl
+            b_, qw = phi_w % s, (phi_w - (phi_w % s)) // s
+            c0 = 0 if phi_w >= 0 else _ceil_div(-phi_w, s)
+            c1 = min(iw, (ow - 1 - phi_w) // s + 1)
+            if c1 <= c0:
+                continue  # cmap: fully cropped column offset — skip.
+            part = mm5[r0:r1, c0:c1, kh, kw, :]
+            acc = acc.at[r0 + qh : r1 + qh, a, c0 + qw : c1 + qw, b_, :].add(part)
+
+    out = acc.reshape(block_oh, ow_p, boc)
+
+    # --- PPU epilogue: bias + activation (+ per-tensor or per-channel
+    #     requant, TFLite-style), fused before the single HBM write.
+    out = out + b_ref[...].astype(acc_dtype)[None, None, :]
+    if per_channel:
+        out = jnp.round(out.astype(jnp.float32) * s_ref[...][None, None, :])
+        out = jnp.clip(out, -128.0, 127.0)
+    elif out_scale is not None:
+        out = jnp.round(out.astype(jnp.float32) * out_scale)
+        out = jnp.clip(out, -128.0, 127.0)
+    out = _ACTIVATIONS[activation](out)
+    o_ref[0, :, :, :] = out.astype(out_dtype)
+
+
+def mm2im_tconv(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int,
+    padding: str = "SAME",
+    block_oh: Optional[int] = None,
+    block_oc: Optional[int] = None,
+    activation: str = "none",
+    out_scale: Optional[float] = None,
+    out_dtype=None,
+    grid_order: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused MM2IM transposed convolution.
+
+    Args:
+      x: (B, Ih, Iw, Ic) activations — f32, bf16 or int8.
+      w: (Ks, Ks, Oc, Ic) filters (HWOI, paper layout).
+      bias: (Oc,) or None.
+      stride / padding: TCONV geometry (padding in {'SAME','VALID'}).
+      block_oh / block_oc: Tiled-MM2IM block sizes; auto-planned if None.
+      activation: fused epilogue nonlinearity.
+      out_scale: if set (int8 mode), requantize int32 accum -> int8.
+      interpret: force Pallas interpret mode (defaults to True off-TPU).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, ih, iw, ic = x.shape
+    ks, ks2, oc, wic = w.shape
+    assert ks == ks2 and wic == ic, (w.shape, x.shape)
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    per_channel = out_scale is not None and not isinstance(out_scale, float)
+    if out_dtype is None:
+        out_dtype = jnp.int8 if (integer and out_scale is not None) else acc_dtype
+
+    if block_oh is None or block_oc is None:
+        p_oh, p_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
+                                 in_bytes=x.dtype.itemsize)
+        block_oh = block_oh or p_oh
+        block_oc = block_oc or p_oc
+    assert block_oh % s == 0, "block_oh must be a multiple of the stride"
+    bi = block_oh // s
+    boc = block_oc
+
+    # Geometry of the input slab per output row-block (DESIGN.md §2).
+    delta = _ceil_div(max(ks - 1 - ct, 0), s)  # top halo (in input rows)
+    eps = (ct - 1) // s                        # bottom halo correction
+    n_slab = bi + delta + eps + 1
+    n_j = _ceil_div(oh, block_oh)
+    n_c = _ceil_div(oc, boc)
+    ow_p = _ceil_div(ow, s) * s
+
+    # Host-side data staging (the driver role): zero-pad so every slab and
+    # every block index is in range; jit fuses these pads into the caller.
+    ihp = (n_j - 1) * bi + n_slab
+    x_p = jnp.pad(x, ((0, 0), (delta, ihp - delta - ih), (0, 0), (0, 0)))
+    oc_p = n_c * boc
+    w3 = jnp.transpose(w, (3, 0, 1, 2)).reshape(ic, ks * ks, oc)  # (K, Ks^2, Oc)
+    w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, oc_p - oc)))
+    if bias is None:
+        bias = jnp.zeros((oc,), acc_dtype)
+    bias_p = jnp.pad(bias.astype(acc_dtype), (0, oc_p - oc))
+    if per_channel:
+        scales_p = jnp.pad(jnp.asarray(out_scale, jnp.float32),
+                           (0, oc_p - oc), constant_values=1.0)
+    else:
+        scales_p = jnp.ones((oc_p,), jnp.float32)
+
+    kernel = functools.partial(
+        _mm2im_kernel,
+        s=s, ks=ks, ct=ct, cl=cl, bi=bi, n_slab=n_slab, iw=iw, ow=ow,
+        ow_p=ow_p, boc=boc, delta=delta, acc_dtype=acc_dtype,
+        out_dtype=out_dtype, activation=activation,
+        out_scale=None if per_channel else out_scale,
+        per_channel=per_channel,
+    )
+
+    # Grid order (Alg. 1 loop-nest choice): j (output rows) is always the
+    # inner sweep; the outer pair decides which operand stays resident in
+    # VMEM across the most steps.  'bcj' = activation-stationary (input
+    # fetched once per batch element), 'cbj' = weight-stationary (each
+    # filter block fetched exactly once, the paper's Alg. 1 order).  'auto'
+    # picks by which operand carries more HBM traffic.
+    if grid_order == "auto":
+        w_bytes = ic * ks * ks * oc_p * w.dtype.itemsize
+        x_bytes = b * ihp * iw * ic * x.dtype.itemsize
+        grid_order = "cbj" if w_bytes > x_bytes else "bcj"
+    if grid_order == "bcj":
+        grid = (b, n_c, n_j)
+        ix = lambda b_, c, j: (b_, 0, 0, 0)
+        iw_ = lambda b_, c, j: (0, 0, c)
+        ib = lambda b_, c, j: (c,)
+        io = lambda b_, c, j: (b_, j, 0, c)
+    elif grid_order == "cbj":
+        grid = (n_c, b, n_j)
+        ix = lambda c, b_, j: (b_, 0, 0, 0)
+        iw_ = lambda c, b_, j: (0, 0, c)
+        ib = lambda c, b_, j: (c,)
+        io = lambda c, b_, j: (b_, j, 0, c)
+    else:
+        raise ValueError(f"grid_order must be 'auto'|'bcj'|'cbj', got {grid_order!r}")
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ihp, iw, ic), ix),
+            pl.BlockSpec((ic, ks * ks, boc), iw_),
+            pl.BlockSpec((boc,), ib),
+            pl.BlockSpec((boc,), ib),
+        ],
+        out_specs=pl.BlockSpec((1, block_oh, ow_p, boc), io),
+        out_shape=jax.ShapeDtypeStruct((b, n_j * block_oh, ow_p, oc_p), out_dtype),
+        interpret=interpret,
+    )(x_p, w3, bias_p, scales_p)
+
+    return out[:, :oh, :ow, :oc]

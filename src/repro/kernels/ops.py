@@ -1,0 +1,124 @@
+"""Public TCONV op: jit'd, differentiable dispatch over implementations.
+
+``tconv(x, w, bias, stride=…, method=…)`` is the framework-facing API used
+by ``layers.TConv`` and the GAN models.  Methods:
+
+  * ``'mm2im'``         — the paper's technique: fused Pallas kernel
+                          (``mm2im_pallas.mm2im_tconv``).  Default.
+  * ``'iom_unfused'``   — paper Eq. (2) unfused: MatMul -> HBM -> col2im
+                          scatter (the XLA-level baseline).
+  * ``'zero_insertion'``— §II-A method (i) baseline.
+  * ``'tdc'``           — §II-A method (ii) baseline.
+  * ``'lax'``           — XLA's native conv_transpose (gold).
+
+Training support: the Pallas forward is wrapped in ``jax.custom_vjp`` whose
+backward pass is the (automatically derived) VJP of the mathematically
+identical dilated-conv formulation — so examples/train_dcgan.py trains
+*through* the MM2IM kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import baselines, ref
+from repro.kernels.mm2im_pallas import mm2im_tconv
+
+_METHODS = ("mm2im", "iom_unfused", "zero_insertion", "tdc", "lax")
+
+
+def _fwd_math(x, w, bias, *, stride, padding):
+    """Differentiable mathematical definition (dilated-conv formulation)."""
+    out = ref.tconv_direct(x, w, stride=stride, padding=padding)
+    if bias is not None:
+        out = out + bias[None, None, None, :]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _mm2im_diff(x, w, bias, stride, padding, activation):
+    out = mm2im_tconv(x, w, bias, stride=stride, padding=padding,
+                      activation=activation)
+    return out
+
+
+def _mm2im_fwd(x, w, bias, stride, padding, activation):
+    out = _mm2im_diff(x, w, bias, stride, padding, activation)
+    return out, (x, w, bias, out)
+
+
+def _mm2im_bwd(stride, padding, activation, res, g):
+    x, w, bias, out = res
+    # Activation backward (epilogue was fused into the kernel).
+    if activation == "relu":
+        g = g * (out > 0)
+    elif activation == "tanh":
+        g = g * (1.0 - out * out)
+    elif activation == "leaky_relu":
+        g = g * jnp.where(out >= 0, 1.0, 0.2)
+    bias0 = jnp.zeros((w.shape[2],), jnp.float32) if bias is None else bias
+    _, vjp = jax.vjp(
+        lambda xx, ww, bb: _fwd_math(xx, ww, bb, stride=stride, padding=padding),
+        x, w, bias0)
+    dx, dw, db = vjp(g)
+    return dx, dw, None if bias is None else db
+
+
+_mm2im_diff.defvjp(_mm2im_fwd, _mm2im_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "method", "activation"))
+def tconv(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int,
+    padding: str = "SAME",
+    method: str = "mm2im",
+    activation: str = "none",
+) -> jax.Array:
+    """Transposed convolution.  x: (B,Ih,Iw,Ic); w: (Ks,Ks,Oc,Ic) HWOI."""
+    if method not in _METHODS:
+        raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
+    if method == "mm2im":
+        return _mm2im_diff(x, w, bias, stride, padding, activation)
+    if method == "iom_unfused":
+        out = ref.iom_reference(x, w, stride=stride, padding=padding)
+    elif method == "zero_insertion":
+        out = baselines.zero_insertion_tconv(x, w, stride=stride, padding=padding)
+    elif method == "tdc":
+        out = baselines.tdc_tconv(x, w, stride=stride, padding=padding)
+    else:
+        out = ref.tconv_lax(x, w, stride=stride, padding=padding)
+    if bias is not None:
+        out = out + bias[None, None, None, :]
+    if activation != "none":
+        from repro.kernels.mm2im_pallas import _ACTIVATIONS
+        out = _ACTIVATIONS[activation](out)
+    return out
+
+
+def tconv_int8(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    bias_q: jax.Array,
+    out_scale,
+    *,
+    stride: int,
+    padding: str = "SAME",
+) -> jax.Array:
+    """8-bit MM2IM TCONV (the paper's precision): int8 in, int8 out.
+
+    ``out_scale`` is a python float (per-tensor requant) or a length-Oc
+    array (TFLite-style per-channel requant, fused in the PPU epilogue).
+    """
+    if not isinstance(out_scale, float):
+        import numpy as _np
+        out_scale = _np.asarray(out_scale, _np.float32)
+    return mm2im_tconv(x_q, w_q, bias_q, stride=stride, padding=padding,
+                       out_scale=out_scale)

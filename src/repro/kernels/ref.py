@@ -1,0 +1,197 @@
+"""Pure-jnp oracles for the MM2IM transposed convolution (TCONV).
+
+Semantics contract (see DESIGN.md §4)
+-------------------------------------
+``tconv(I_h, I_w, I_c, Ks, O_c, S)`` over NHWC activations ``x`` and
+HWOI weights ``w[Ks, Ks, O_c, I_c]``:
+
+  full[S*ih + kh, S*iw + kw, oc] += sum_ic x[ih, iw, ic] * w[kh, kw, oc, ic]
+
+* ``padding='VALID'``: output is ``full`` — shape ``(S*(I-1)+Ks, ...)``.
+* ``padding='SAME'``:  output is ``full`` cropped by ``(Ks-S)//2`` at the
+  top/left to shape ``(S*I_h, S*I_w)`` — verified numerically identical to
+  ``lax.conv_transpose(..., 'SAME')`` with a spatially-flipped HWIO kernel
+  (the TF/TFLite convention used by the paper).  Requires ``Ks >= S``.
+
+Three independent oracles are provided; tests assert they agree:
+
+* :func:`tconv_lax`       — XLA's ``lax.conv_transpose`` (gold).
+* :func:`iom_reference`   — the paper's Eq. (2): ``col2im(mm(I, W_T))``,
+  with the MatMul and scatter-add col2im written out explicitly.  This is
+  also the *unfused IOM baseline* for benchmarks: it materializes the full
+  ``(M, Ks^2*O_c)`` partial-product matrix (dropped outputs included).
+* :func:`tconv_direct`    — direct python-free scatter via dilated padding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def out_size(i: int, ks: int, s: int, padding: str) -> int:
+    if padding == "SAME":
+        return s * i
+    if padding == "VALID":
+        return s * (i - 1) + ks
+    raise ValueError(f"unknown padding {padding!r}")
+
+
+def crop_offsets(ks: int, s: int, padding: str) -> Tuple[int, int]:
+    """(crop_top, crop_left) of the SAME crop applied to the full IOM output."""
+    if padding == "VALID":
+        return 0, 0
+    if ks < s:
+        raise NotImplementedError("SAME TCONV with Ks < S is unsupported")
+    c = (ks - s) // 2
+    return c, c
+
+
+# ---------------------------------------------------------------------------
+# Oracle 1: XLA conv_transpose (gold standard)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def tconv_lax(x: jax.Array, w: jax.Array, *, stride: int, padding: str = "SAME") -> jax.Array:
+    """TCONV via lax.conv_transpose.  x: (B,Ih,Iw,Ic), w: (Ks,Ks,Oc,Ic)."""
+    # Our scatter semantics == conv_transpose with HWIO kernel flipped in H/W.
+    w_hwio = jnp.transpose(w, (0, 1, 3, 2))[::-1, ::-1]  # (Ks,Ks,Ic,Oc)
+    out = lax.conv_transpose(
+        x.astype(jnp.float32),
+        w_hwio.astype(jnp.float32),
+        strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Oracle 2: the paper's IOM method — MatMul + explicit col2im scatter-add
+# ---------------------------------------------------------------------------
+
+
+def iom_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """The IOM MatMul: (B, M, K) @ (K, N) -> (B, M, N).
+
+    M = Ih*Iw, K = Ic, N = Ks*Ks*Oc.  This materializes every partial
+    product, including the ones col2im will drop (the paper's P1).
+    """
+    b, ih, iw, ic = x.shape
+    ks, _, oc, _ = w.shape
+    x2 = x.reshape(b, ih * iw, ic)
+    w2 = jnp.transpose(w, (3, 0, 1, 2)).reshape(ic, ks * ks * oc)  # (K, N)
+    return jnp.einsum("bmk,kn->bmn", x2.astype(jnp.float32), w2.astype(jnp.float32))
+
+
+def col2im(
+    mm_out: jax.Array,
+    *,
+    ih: int,
+    iw: int,
+    ks: int,
+    oc: int,
+    stride: int,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Scatter-accumulate MatMul partial products into the final output.
+
+    mm_out: (B, M=Ih*Iw, N=Ks*Ks*Oc).  Returns (B, Oh, Ow, Oc).
+    Dropped (cropped) partial products are discarded here — exactly the
+    ineffectual computations MM2IM skips.
+    """
+    b = mm_out.shape[0]
+    oh = out_size(ih, ks, stride, padding)
+    ow = out_size(iw, ks, stride, padding)
+    ct, cl = crop_offsets(ks, stride, padding)
+
+    m5 = mm_out.reshape(b, ih, iw, ks, ks, oc)
+
+    # Flat scatter indices: out[S*r - ct + kh, S*c - cl + kw] += m5[r, c, kh, kw]
+    r = jnp.arange(ih)[:, None, None, None]
+    c = jnp.arange(iw)[None, :, None, None]
+    kh = jnp.arange(ks)[None, None, :, None]
+    kw = jnp.arange(ks)[None, None, None, :]
+    toh = stride * r - ct + kh  # (ih,iw,ks,ks)
+    tow = stride * c - cl + kw
+    valid = (toh >= 0) & (toh < oh) & (tow >= 0) & (tow < ow)
+    flat = jnp.where(valid, toh * ow + tow, oh * ow)  # OOB bucket at end
+
+    out = jnp.zeros((b, oh * ow + 1, oc), mm_out.dtype)
+    upd = m5.reshape(b, ih * iw * ks * ks, oc)
+    idx = flat.reshape(ih * iw * ks * ks)
+    out = out.at[:, idx].add(upd)
+    return out[:, : oh * ow].reshape(b, oh, ow, oc)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def iom_reference(x: jax.Array, w: jax.Array, *, stride: int, padding: str = "SAME") -> jax.Array:
+    """The paper's Eq. (2): out = col2im(mm(I, W_T)).  Unfused IOM baseline."""
+    _, ih, iw, _ = x.shape
+    ks, _, oc, _ = w.shape
+    mm = iom_matmul(x, w)
+    return col2im(mm, ih=ih, iw=iw, ks=ks, oc=oc, stride=stride, padding=padding)
+
+
+# ---------------------------------------------------------------------------
+# Oracle 3: direct dilated scatter (used as a third opinion in tests)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def tconv_direct(x: jax.Array, w: jax.Array, *, stride: int, padding: str = "SAME") -> jax.Array:
+    """TCONV = conv(interior-dilated input, flipped kernel, full padding)."""
+    b, ih, iw, ic = x.shape
+    ks, _, oc, _ = w.shape
+    s = stride
+    xf = x.astype(jnp.float32)
+    # Interior-dilate the input by S-1 zeros: shape S*(I-1)+1.
+    xd = lax.pad(xf, jnp.float32(0), [(0, 0, 0), (0, 0, s - 1), (0, 0, s - 1), (0, 0, 0)])
+    # Full correlation with w viewed as (Ks,Ks,Ic,Oc), flipped spatially.
+    w_f = jnp.transpose(w, (0, 1, 3, 2))[::-1, ::-1].astype(jnp.float32)
+    full = lax.conv_general_dilated(
+        xd, w_f, window_strides=(1, 1), padding=[(ks - 1, ks - 1), (ks - 1, ks - 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    ct, cl = crop_offsets(ks, s, padding)
+    ohf, owf = s * (ih - 1) + ks, s * (iw - 1) + ks
+    full = full[:, : ohf, : owf]  # conv output is exactly full size already
+    if padding == "VALID":
+        return full
+    oh, ow = s * ih, s * iw
+    return lax.dynamic_slice(full, (0, ct, cl, 0), (b, oh, ow, oc))
+
+
+# ---------------------------------------------------------------------------
+# Quantized oracle (paper runs 8-bit): int8 x int8 -> int32 accum -> requant
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def iom_reference_int8(
+    x_q: jax.Array,  # (B,Ih,Iw,Ic) int8
+    w_q: jax.Array,  # (Ks,Ks,Oc,Ic) int8
+    bias_q: jax.Array,  # (Oc,) int32
+    *,
+    stride: int,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Integer IOM TCONV with exact int32 accumulation (no requant)."""
+    b, ih, iw, ic = x_q.shape
+    ks, _, oc, _ = w_q.shape
+    x2 = x_q.reshape(b, ih * iw, ic).astype(jnp.int32)
+    w2 = jnp.transpose(w_q, (3, 0, 1, 2)).reshape(ic, ks * ks * oc).astype(jnp.int32)
+    mm = jnp.einsum("bmk,kn->bmn", x2, w2)
+    out = col2im(mm, ih=ih, iw=iw, ks=ks, oc=oc, stride=stride, padding=padding)
+    return out + bias_q[None, None, None, :]
+
+
+def requantize(acc_i32: jax.Array, scale: jax.Array, zero_point: int = 0) -> jax.Array:
+    """Requantize int32 accumulators to int8 (per-tensor scale), TFLite-style."""
+    y = jnp.round(acc_i32.astype(jnp.float32) * scale) + zero_point
+    return jnp.clip(y, -128, 127).astype(jnp.int8)

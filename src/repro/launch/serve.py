@@ -1,0 +1,66 @@
+"""Serving launcher: batched prefill + decode with a KV cache.
+
+``python -m repro.launch.serve --arch qwen2.5-3b --tokens 32 --batch 4``
+
+Runs the smoke config on CPU (``--full`` for real hardware).  Exercises
+the serve path the decode_* dry-run cells lower: prefill the prompt, then
+step the sequence-shardable cache one token at a time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import lm
+from repro.runtime.fault_tolerance import elastic_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    spec = registry.get(args.arch)
+    cfg = spec.model if args.full else spec.smoke
+    mesh = elastic_mesh(args.model_parallel)
+    max_seq = args.prompt_len + args.tokens
+
+    with jax.set_mesh(mesh):
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        rng = jax.random.PRNGKey(1)
+        prompt = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                    cfg.vocab)
+        cache = lm.init_cache(cfg, args.batch, max_seq, dtype=jnp.float32)
+
+        decode = jax.jit(lambda p, t, c: lm.decode(cfg, p, t, c))
+        # Prefill via repeated decode (teacher forcing the prompt).
+        tok = prompt[:, :1]
+        t0 = time.time()
+        for i in range(args.prompt_len):
+            logits, cache = decode(params, prompt[:, i:i + 1], cache)
+        out = []
+        for _ in range(args.tokens):
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out.append(tok)
+            logits, cache = decode(params, tok, cache)
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        total = args.batch * (args.prompt_len + args.tokens)
+        print(f"[serve] {cfg.name}: {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s, batch={args.batch})")
+        print("[serve] sample continuation:",
+              jnp.concatenate(out, 1)[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

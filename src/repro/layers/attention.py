@@ -1,0 +1,289 @@
+"""Attention layers: GQA (+bias, +qk-norm), local-window, cross-attention.
+
+Three execution paths share one parameter layout:
+
+* :func:`attend`       — full quadratic attention (training / short prefill).
+* :func:`attend_chunked` — lax.scan online-softmax ("flash-style") attention;
+  bounded activation memory for 32k prefill.  Chosen by ``chunk_q``.
+* :func:`decode_step`  — single-token decode against a (possibly
+  sequence-sharded) KV cache; supports local-window ring caches.
+
+Sharding: q/k/v are column-parallel over 'model' (heads), o row-parallel —
+one all-reduce per layer (Megatron).  KV caches for long decode are sharded
+over 'model' on the *sequence* dim (flash-decode style partial softmax —
+XLA inserts the cross-shard max/sum reductions automatically).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.common import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, d_model: int, n_heads: int, kv_heads: int,
+                   head_dim: Optional[int] = None, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32):
+    hd = head_dim or d_model // n_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d_model, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d_model, kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d_model, kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d_model, dtype),
+    }
+    specs = {
+        "wq": P("data", "model"), "wk": P("data", "model"),
+        "wv": P("data", "model"), "wo": P("model", "data"),
+    }
+    if qkv_bias:
+        params.update(bq=jnp.zeros((n_heads * hd,), dtype),
+                      bk=jnp.zeros((kv_heads * hd,), dtype),
+                      bv=jnp.zeros((kv_heads * hd,), dtype))
+        specs.update(bq=P("model"), bk=P("model"), bv=P("model"))
+    if qk_norm:
+        qn, qs = init_rmsnorm(hd, dtype)
+        kn, _ = init_rmsnorm(hd, dtype)
+        params.update(q_norm=qn, k_norm=kn)
+        specs.update(q_norm=qs, k_norm=qs)
+    return params, specs
+
+
+def _project_qkv(params, x, n_heads: int, kv_heads: int, positions,
+                 *, rope_theta: float = 10000.0, use_rope: bool = True):
+    b, l, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    hd = q.shape[-1] // n_heads
+    q = q.reshape(b, l, n_heads, hd)
+    k = k.reshape(b, l, kv_heads, hd)
+    v = v.reshape(b, l, kv_heads, hd)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Lq,H,hd), k: (B,Lk,Hkv,hd) -> (B, Hkv, H/Hkv, Lq, Lk)."""
+    b, lq, h, hd = q.shape
+    hkv = k.shape[2]
+    return jnp.einsum("blgrd,bmgd->bgrlm", q.reshape(b, lq, hkv, h // hkv, hd), k)
+
+
+def attend(params, x, *, n_heads: int, kv_heads: int, positions=None,
+           causal: bool = True, window: Optional[int] = None,
+           rope_theta: float = 10000.0, use_rope: bool = True):
+    """Full materialized-scores attention (train_4k path)."""
+    b, l, d = x.shape
+    if positions is None:
+        positions = jnp.arange(l)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, kv_heads, positions,
+                           rope_theta=rope_theta, use_rope=use_rope)
+    hd = q.shape[-1]
+    with jax.named_scope("attn_core"):
+        scores = _gqa_scores(q, k) / jnp.sqrt(hd).astype(jnp.float32)
+        i = jnp.arange(l)[:, None]
+        j = jnp.arange(l)[None, :]
+        mask = jnp.ones((l, l), bool)
+        if causal:
+            mask &= j <= i
+        if window is not None:
+            mask &= j > i - window
+        scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                           NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bgrlm,bmgd->blgrd", p, v)
+    out = out.reshape(b, l, n_heads * hd)
+    return out @ params["wo"]
+
+
+def attend_flash(params, x, *, n_heads: int, kv_heads: int, positions=None,
+                 causal: bool = True, window: Optional[int] = None,
+                 block_q: int = 512, block_k: int = 512,
+                 rope_theta: float = 10000.0, use_rope: bool = True):
+    """Attention through the Pallas flash kernel (TPU execution path).
+
+    Numerically identical to :func:`attend` (tests assert it); scores
+    never leave VMEM, which removes the O(L^2) HBM traffic that dominates
+    the *_prefill_32k roofline cells (EXPERIMENTS §Perf hillclimb B).
+    """
+    from repro.kernels.flash_attention import flash_attention
+
+    b, l, d = x.shape
+    if positions is None:
+        positions = jnp.arange(l)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, kv_heads, positions,
+                           rope_theta=rope_theta, use_rope=use_rope)
+    hd = q.shape[-1]
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=min(block_q, l), block_k=min(block_k, l))
+    return out.reshape(b, l, n_heads * hd) @ params["wo"]
+
+
+def attend_chunked(params, x, *, n_heads: int, kv_heads: int, positions=None,
+                   causal: bool = True, window: Optional[int] = None,
+                   chunk_q: int = 512, chunk_k: int = 1024,
+                   rope_theta: float = 10000.0, use_rope: bool = True):
+    """Online-softmax chunked attention — O(chunk_q * L) live memory.
+
+    Pure-JAX flash-style formulation (lax.scan over KV chunks inside a scan
+    over Q chunks); numerically identical to :func:`attend` up to fp
+    reassociation.  This keeps 32k-prefill activation memory bounded.
+    """
+    b, l, d = x.shape
+    if positions is None:
+        positions = jnp.arange(l)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, kv_heads, positions,
+                           rope_theta=rope_theta, use_rope=use_rope)
+    hd = q.shape[-1]
+    g = kv_heads
+    r = n_heads // kv_heads
+    nq = -(-l // chunk_q)
+    nk = -(-l // chunk_k)
+    lq_p, lk_p = nq * chunk_q, nk * chunk_k
+    qp = jnp.pad(q, ((0, 0), (0, lq_p - l), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, lk_p - l), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, lk_p - l), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, chunk_q, g, r, hd).transpose(1, 0, 3, 4, 2, 5)
+    kp = kp.reshape(b, nk, chunk_k, g, hd).transpose(1, 0, 3, 2, 4)
+    vp = vp.reshape(b, nk, chunk_k, g, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx  # qi: (B,G,R,cq,hd)
+        q_pos = iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kv_and_idx):  # noqa: ANN001 — attn_core scope below
+            m, s, acc = carry
+            (ki, vi), ik = kv_and_idx  # ki: (B,G,ck,hd)
+            k_pos = ik * chunk_k + jnp.arange(chunk_k)
+            sc = jnp.einsum("bgrqd,bgkd->bgrqk", qi, ki).astype(jnp.float32) * scale
+            msk = k_pos[None, :] < l
+            if causal:
+                msk &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                msk &= k_pos[None, :] > q_pos[:, None] - window
+            sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            s_new = s * alpha + pexp.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", pexp.astype(vi.dtype), vi).astype(jnp.float32)
+            return (m_new, s_new, acc_new), None
+
+        m0 = jnp.full((b, g, r, chunk_q), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((b, g, r, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, g, r, chunk_q, hd), jnp.float32)
+        with jax.named_scope("attn_core"):
+            (m, s, acc), _ = jax.lax.scan(kv_step, (m0, s0, a0),
+                                          ((kp, vp), jnp.arange(nk)))
+        out = acc / jnp.maximum(s, 1e-30)[..., None]
+        return None, out.astype(x.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qp, jnp.arange(nq)))
+    # outs: (nq, B, G, R, cq, hd) -> (B, L, H*hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, lq_p, n_heads * hd)[:, :l]
+    return out @ params["wo"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, Hkv, hd)
+    v: jax.Array  # (B, S, Hkv, hd)
+    length: jax.Array  # scalar int32 — tokens filled so far
+
+    @staticmethod
+    def empty(batch: int, seq: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (batch, seq, kv_heads, head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def specs(seq_axis: Optional[str] = "model", batch_axis="data"):
+        s = P(batch_axis, seq_axis, None, None)
+        return KVCache(s, s, P())
+
+
+def decode_step(params, x, cache: KVCache, *, n_heads: int, kv_heads: int,
+                window: Optional[int] = None, rope_theta: float = 10000.0,
+                use_rope: bool = True):
+    """One-token decode.  x: (B, 1, D).  Returns (out, new_cache).
+
+    The cache may be sequence-sharded over 'model' (flash-decode): the
+    softmax reductions below contract over the sharded S dim and XLA
+    inserts the partial-max/partial-sum collectives.
+    For ``window`` caches the buffer is a ring of size ``window``.
+    """
+    b, one, d = x.shape
+    s_max = cache.k.shape[1]
+    pos = cache.length
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads, kv_heads, positions,
+                           rope_theta=rope_theta, use_rope=use_rope)
+    hd = q.shape[-1]
+    slot = pos % s_max if window is not None else pos
+    k_new = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    g, r = kv_heads, n_heads // kv_heads
+    qg = q.reshape(b, g, r, hd)
+    sc = jnp.einsum("bgrd,bsgd->bgrs", qg, k_new.astype(q.dtype))
+    sc = sc.astype(jnp.float32) / jnp.sqrt(hd)
+    idx = jnp.arange(s_max)
+    if window is None:
+        valid = idx <= pos
+    else:
+        # Ring buffer: the first min(pos+1, window) slots hold the most
+        # recent tokens (in rotated order — softmax is order-invariant).
+        valid = idx < jnp.minimum(pos + 1, s_max)
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v.dtype), v_new.astype(v.dtype))
+    out = out.reshape(b, 1, n_heads * hd)
+    out = out @ params["wo"]
+    return out, KVCache(k_new, v_new, pos + 1)
+
+
+def init_cross_attention(key, d_model: int, n_heads: int, kv_heads: int,
+                         dtype=jnp.float32):
+    return init_attention(key, d_model, n_heads, kv_heads, dtype=dtype)
+
+
+def cross_attend(params, x, enc_kv, *, n_heads: int, kv_heads: int):
+    """Encoder-decoder cross attention.  enc_kv: precomputed (k, v) tuple."""
+    b, l, d = x.shape
+    q = (x @ params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    hd = q.shape[-1] // n_heads
+    q = q.reshape(b, l, n_heads, hd)
+    k, v = enc_kv
+    g, r = kv_heads, n_heads // kv_heads
+    sc = jnp.einsum("blgrd,bmgd->bgrlm", q.reshape(b, l, g, r, hd), k)
+    p = jax.nn.softmax(sc.astype(jnp.float32) / jnp.sqrt(hd), axis=-1)
+    out = jnp.einsum("bgrlm,bmgd->blgrd", p.astype(v.dtype), v)
+    return out.reshape(b, l, n_heads * hd) @ params["wo"]
+
+
+def encoder_kv(params, enc_out, *, kv_heads: int):
+    b, m, d = enc_out.shape
+    k = enc_out @ params["wk"]
+    v = enc_out @ params["wv"]
+    if "bk" in params:
+        k, v = k + params["bk"], v + params["bv"]
+    hd = k.shape[-1] // kv_heads
+    return k.reshape(b, m, kv_heads, hd), v.reshape(b, m, kv_heads, hd)

@@ -1,0 +1,242 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k (GShard-style).
+
+Design (DESIGN.md §6, EP):
+
+* **Local dispatch**: each data shard routes its *local* tokens into
+  per-expert capacity buffers (capacity ``C = ceil(k*T_local/E * cf)``)
+  via one-hot dispatch einsums — differentiable, pjit-friendly, no host
+  control flow.  Tokens over capacity are dropped (standard GShard).
+* **Expert sharding**: expert weights are stored ``P(None, 'data', 'model')``
+  (experts replicated, FSDP over d_model, TP over d_ff) — this keeps
+  grok-1's 8x32768 experts and qwen2-moe's 60 small experts under the HBM
+  budget on a (16,16) pod.  The d_model contraction over 'data' surfaces as
+  an all-reduce in the collective roofline — an explicit hillclimb lever.
+* **Router**: f32 logits, softmax-then-topk (qwen) with renormalization;
+  auxiliary load-balancing loss returned to the train step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.common import dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             *, n_shared: int = 0, shared_d_ff: Optional[int] = None,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e = n_experts
+    params = {
+        "router": dense_init(ks[0], d_model, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, d_ff), jnp.float32)
+                   / jnp.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, d_ff), jnp.float32)
+                 / jnp.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, d_ff, d_model), jnp.float32)
+                   / jnp.sqrt(d_ff)).astype(dtype),
+    }
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(None, "data", "model"),
+        "w_up": P(None, "data", "model"),
+        "w_down": P(None, "model", "data"),
+    }
+    if n_shared:
+        sff = shared_d_ff or d_ff
+        params["shared"] = {
+            "w_gate": dense_init(ks[4], d_model, n_shared * sff, dtype),
+            "w_up": dense_init(jax.random.fold_in(ks[4], 1), d_model, n_shared * sff, dtype),
+            "w_down": dense_init(jax.random.fold_in(ks[4], 2), n_shared * sff, d_model, dtype),
+        }
+        specs["shared"] = {
+            "w_gate": P("data", "model"),
+            "w_up": P("data", "model"),
+            "w_down": P("model", "data"),
+        }
+    return params, specs
+
+
+def moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
+        router_softmax_before_topk: bool = True, group_size: int = 1024,
+        sharding_mode: str = "replicated_gather"):
+    """x: (B, L, D) -> (out, aux_loss).
+
+    Tokens are split into groups of ``group_size`` (GShard-style) so the
+    dispatch/combine tensors stay O(T * k * g * cf) instead of O(T^2) —
+    the difference between 1.3 GB and 21 TB of transients at train_4k.
+    Capacity is per-group: C = ceil(k * g / E * cf).
+
+    Sharding modes (EXPERIMENTS.md §Perf, hillclimb A — chosen so no
+    capacity-inflated (E, C, *) tensor is ever reduced across the mesh):
+
+    * ``replicated_gather`` — groups stay aligned with the (data, model)
+      token sharding (``group_size`` must divide the per-shard sequence),
+      so dispatch/expert/combine einsums are all *batch-sharded over G*
+      and fully local.  Expert weights are stored FSDP-sharded and
+      ZeRO-3-gathered to replicated just-in-time inside each scanned
+      layer (reverse = reduce-scatter of dw).  Right when per-layer
+      expert weights are small (qwen2-moe: 60 x 2048 x 1408).
+    * ``tensor_parallel`` — sequence sharding is collapsed before routing
+      (one (T, D) all-gather), groups are data-sharded, expert weights
+      keep d_ff sharded over 'model' (Megatron style): one (T-sized)
+      all-reduce after combine.  Right when per-layer expert weights are
+      too big to replicate even transiently (grok: 8 x 6144 x 32768).
+    """
+    from repro.distributed.sharding import constrain
+
+    b, l, d = x.shape
+    t = b * l
+    g = min(group_size, t)
+    while t % g:  # shrink to a divisor (shapes here are powers of two)
+        g -= 1
+
+    # Keep batch and chunk as SEPARATE leading dims (B, L/g, g, D): merging
+    # them into one product-sharded axis makes XLA fall back to zero-pad +
+    # all-reduce resharding (measured: a 17 GB AR per layer) — per-dim
+    # shardings propagate cleanly through the un-merged reshape.
+    g = min(g, l)
+    while l % g:
+        g -= 1
+    if sharding_mode == "tensor_parallel":
+        out, aux = _moe_tensor_parallel(
+            params, x, g, top_k=top_k, capacity_factor=capacity_factor,
+            router_softmax_before_topk=router_softmax_before_topk)
+    elif sharding_mode == "fsdp_merged":
+        # Flat (T//g, g) grouping with no explicit constraints: leaves all
+        # collective placement to SPMD.  For grok-scale experts this
+        # remains the best *expressible* layout (EXPERIMENTS §Perf C) —
+        # the superior deferred-AR layout needs manual collectives that
+        # crash this XLA build.
+        xt = x.reshape(t // g, g, d)
+        fn = lambda xg: _moe_group(
+            {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")},
+            xg, top_k=top_k, capacity_factor=capacity_factor,
+            router_softmax_before_topk=router_softmax_before_topk)
+        out, aux = jax.vmap(fn)(xt)
+        out = out.reshape(b, l, d)
+    else:
+        # Groups aligned with the (data, model) token sharding so every
+        # dispatch/expert/combine einsum is batch-sharded over (B, chunk).
+        # 'replicated_gather' additionally ZeRO-3-gathers the expert
+        # weights to replicated just-in-time (small experts);  'fsdp'
+        # leaves them FSDP-sharded and lets SPMD pick the collectives
+        # (large experts that cannot be replicated even transiently).
+        if sharding_mode == "replicated_gather":
+            w_gate = constrain(params["w_gate"], P(None, None, None))
+            w_up = constrain(params["w_up"], P(None, None, None))
+            w_down = constrain(params["w_down"], P(None, None, None))
+        else:  # fsdp
+            w_gate, w_up, w_down = (params["w_gate"], params["w_up"],
+                                    params["w_down"])
+        xt = x.reshape(b, l // g, g, d)
+        xt = constrain(xt, P("data", "model", None, None))
+        eparams = {"router": params["router"], "w_gate": w_gate,
+                   "w_up": w_up, "w_down": w_down}
+        group_fn = lambda xg: _moe_group(
+            eparams, xg, top_k=top_k, capacity_factor=capacity_factor,
+            router_softmax_before_topk=router_softmax_before_topk)
+        out, aux = jax.vmap(jax.vmap(group_fn))(xt)
+        out = out.reshape(b, l, d)
+    if "shared" in params:
+        sp = params["shared"]
+        xf = x.reshape(t, d)
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        out = out + (hs @ sp["w_down"]).reshape(b, l, d)
+    return out, aux.mean()
+
+
+def _moe_tensor_parallel(params, x, g, *, top_k: int, capacity_factor: float,
+                         router_softmax_before_topk: bool):
+    """Expert block with d_ff tensor-parallel over 'model' (grok-scale).
+
+    Auto-SPMD all-reduces the capacity-inflated (E, C, D) expert outputs
+    (measured: 12 GB/layer on grok).  The *ideal* layout applies the
+    (linear) combine einsum to the partial per-shard expert outputs under
+    manual shard_map and psums only the token-sized (T, D) result — the
+    same output-stationary "accumulate at the final destination"
+    discipline as MM2IM's col2im (DESIGN.md §2) — but that nesting crashes
+    this XLA build inside the remat'd layer scan (EXPERIMENTS §Perf C2);
+    the constraint-based layout below is the best expressible fallback.
+    """
+    from repro.distributed.sharding import constrain
+
+    b, l, d = x.shape
+    # Keep sequence sharding (SP): collapsing it 16x-inflates the
+    # per-device dispatch work and the (E, C, D) all-reduce payloads
+    # (measured: C1 regression, EXPERIMENTS §Perf).  Chunks align with
+    # the sequence shards when group_size divides the per-shard length.
+    xt = x.reshape(b, l // g, g, d)
+    xt = constrain(xt, P("data", "model", None, None))
+
+    # NOTE: the ideal here is shard_map manual over 'model' with the
+    # combine applied to *partial* expert outputs and a token-sized psum
+    # (tried; hits an XLA:CPU crash — "Invalid binary instruction opcode
+    # copy" — when nested in the remat'd layer scan; see EXPERIMENTS
+    # §Perf C2-refuted).  The constraint-based layout below keeps d_ff
+    # tensor-parallel and relies on explicit low-precision casts in
+    # _moe_group to halve the capacity-inflated all-reduce.
+    eparams = {
+        "router": params["router"],
+        "w_gate": constrain(params["w_gate"], P(None, None, "model")),
+        "w_up": constrain(params["w_up"], P(None, None, "model")),
+        "w_down": constrain(params["w_down"], P(None, "model", None)),
+    }
+    fn = lambda xx: _moe_group(
+        eparams, xx, top_k=top_k, capacity_factor=capacity_factor,
+        router_softmax_before_topk=router_softmax_before_topk)
+    out, aux = jax.vmap(jax.vmap(fn))(xt)
+    return out.reshape(b, l, d), aux
+
+
+def _moe_group(params, xt, *, top_k: int, capacity_factor: float,
+               router_softmax_before_topk: bool):
+    """Route one token group.  xt: (g, D)."""
+    t, d = xt.shape
+    e = params["router"].shape[-1]
+    cap = max(int(top_k * t / e * capacity_factor), 1)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (T, E)
+    if router_softmax_before_topk:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, sel = jax.lax.top_k(probs, top_k)  # (T, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    else:
+        top_logits, sel = jax.lax.top_k(logits, top_k)
+        gate_vals = jax.nn.softmax(top_logits, axis=-1)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * top_k, e)
+    pos_in_e = (jnp.cumsum(flat, axis=0) - flat).reshape(t, top_k, e)
+    pos = (pos_in_e * onehot).sum(-1)  # (T, k)
+    keep = pos < cap
+
+    # Dispatch/combine tensors (T, E, C): one-hot expert x one-hot slot.
+    # Dropped (over-capacity) choices land in a sacrificial slot `cap`
+    # that is sliced away.
+    e_oh = jax.nn.one_hot(sel, e, dtype=xt.dtype)  # (T, k, E)
+    c_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                          dtype=xt.dtype)[..., :cap]  # (T, k, C)
+    disp = jnp.einsum("tke,tkc->tec", e_oh, c_oh)
+    combine = jnp.einsum("tk,tke,tkc->tec", gate_vals.astype(xt.dtype), e_oh, c_oh)
+
+    # Keep every capacity-inflated tensor in the activation dtype — the
+    # (E, C, *) tensors are what tensor-parallel mode all-reduces, and an
+    # f32 upcast here doubles that traffic (EXPERIMENTS §Perf C).
+    dt = xt.dtype
+    xe = jnp.einsum("tec,td->ecd", disp, xt).astype(dt)  # (E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])).astype(dt)
+    h = h * jnp.einsum("ecd,edf->ecf", xe, params["w_up"]).astype(dt)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).astype(dt)  # (E, C, D)
+    out = jnp.einsum("tec,ecd->td", combine, ye)
+
+    # GShard aux loss: mean_e (fraction_tokens_e * mean_router_prob_e) * E.
+    me = jax.nn.one_hot(sel[:, 0], e, dtype=jnp.float32).mean(0)
+    pe = jax.nn.softmax(logits, axis=-1).mean(0)
+    aux = (me * pe).sum() * e
+    return out, aux

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear diagonal recurrence -> training uses ``jax.lax.associative_scan``
+(log-depth, scan-parallel); decode is O(1) per step.  The full residual
+block is: conv1d(4) -> RG-LRU inside a gated (GeGLU-style) branch, as in
+Griffin's "recurrent block".
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.common import dense_init
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru_block(key, d_model: int, *, d_rnn: int | None = None,
+                     d_conv: int = 4, dtype=jnp.float32):
+    d_rnn = d_rnn or d_model
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_x": dense_init(ks[0], d_model, d_rnn, dtype),      # main branch in
+        "w_gate": dense_init(ks[1], d_model, d_rnn, dtype),   # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (d_conv, d_rnn), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": dense_init(ks[3], d_rnn, d_rnn, dtype),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": dense_init(ks[4], d_rnn, d_rnn, dtype),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": jnp.full((d_rnn,), 0.5, jnp.float32),  # Lambda (pre-softplus)
+        "w_out": dense_init(ks[5], d_rnn, d_model, dtype),
+    }
+    specs = {
+        "w_x": P("data", "model"), "w_gate": P("data", "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "w_a": P("data", "model"), "b_a": P("model"),
+        "w_i": P("data", "model"), "b_i": P("model"),
+        "lam": P("model"),
+        "w_out": P("model", "data"),
+    }
+    return params, specs
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,L,Drnn), negative
+    return log_a, i
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_rnn)
+    h: jax.Array     # (B, d_rnn) f32
+    length: jax.Array
+
+    @staticmethod
+    def specs(batch_axis="data"):
+        return RGLRUState(P(batch_axis, None, "model"), P(batch_axis, "model"), P())
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i: pad.shape[1] - (k - 1 - i), :] * w[i][None, None]
+               for i in range(k)) + b[None, None]
+
+
+def rglru_block(params, x):
+    """Full recurrent block forward.  x: (B, L, D) -> (B, L, D)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_x"]
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+
+    log_a, i_gate = _gates(params, u)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_gate * u.astype(jnp.float32))
+
+    def combine(l, r):
+        (al, hl), (ar, hr) = l, r
+        return al * ar, hl * ar + hr
+
+    a_t = a.transpose(1, 0, 2)          # (L, B, D)
+    x_t = gated_in.transpose(1, 0, 2)
+    _, h = jax.lax.associative_scan(combine, (a_t, x_t))
+    h = h.transpose(1, 0, 2).astype(x.dtype)
+    return (h * gate) @ params["w_out"]
+
+
+def rglru_init_state(batch: int, d_rnn: int, *, d_conv: int = 4,
+                     dtype=jnp.float32) -> RGLRUState:
+    return RGLRUState(jnp.zeros((batch, d_conv - 1, d_rnn), dtype),
+                      jnp.zeros((batch, d_rnn), jnp.float32),
+                      jnp.zeros((), jnp.int32))
+
+
+def rglru_step(params, x, state: RGLRUState):
+    """Single-token decode.  x: (B, 1, D)."""
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate"])
+    u = x[:, 0] @ params["w_x"]
+    hist = jnp.concatenate([state.conv, u[:, None]], 1)
+    u = (hist * params["conv_w"][None]).sum(1) + params["conv_b"][None]
+
+    log_a, i_gate = _gates(params, u[:, None])
+    log_a, i_gate = log_a[:, 0], i_gate[:, 0]
+    a = jnp.exp(log_a)
+    h = state.h * a + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_gate * u.astype(jnp.float32))
+    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None]
+    return out, RGLRUState(hist[:, 1:], h, state.length + 1)

@@ -1,0 +1,199 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Scalar-identity SSM per head:  h_t = a_t * h_{t-1} + (b_t dt_t) x_t,
+y_t = c_t^T h_t, with a_t = exp(-dt_t * A_head).  The SSD *chunked* algorithm
+computes, per chunk of length Q:
+
+  * intra-chunk: a masked quadratic "attention" term  (C_i^T B_j) * decay
+  * inter-chunk: chunk-final states carried by an exclusive cumulative
+    product of chunk decays (associative scan over chunks)
+
+This gives O(L*Q) work (linear in L) and is the reason mamba2 *runs* the
+``long_500k`` shape that quadratic attention cannot.
+
+Decode is a single recurrent state update: state (B, H, P, N).
+
+Layout: x is expanded to (B, L, H, P=head_dim); B/C are (B, L, G, N) with G
+state groups (G=1 here, the mamba2 default ngroups=1, broadcast to heads).
+A short depthwise causal conv1d precedes the SSM as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.common import dense_init
+
+
+def init_mamba2(key, d_model: int, *, head_dim: int = 64, expand: int = 2,
+                d_state: int = 128, d_conv: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    # Fused input projection: [x (d_inner), z gate (d_inner), B (N), C (N), dt (H)]
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    params = {
+        "w_in": dense_init(ks[0], d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner + 2 * d_state),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+    specs = {
+        "w_in": P("data", "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "a_log": P(None), "dt_bias": P(None), "d_skip": P(None),
+        "norm_scale": P("model"),
+        "w_out": P("model", "data"),
+    }
+    return params, specs
+
+
+def _split_proj(params, proj, d_model: int, head_dim: int, expand: int, d_state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    xbc, z, dt = jnp.split(proj, [d_inner + 2 * d_state,
+                                  2 * d_inner + 2 * d_state], axis=-1)
+    return xbc, z, dt, d_inner, n_heads
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d over (B, L, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : pad.shape[1] - (k - 1 - i), :] * w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_inner + 2N) — conv tail buffer
+    ssm: jax.Array    # (B, H, P, N) — recurrent state
+    length: jax.Array
+
+    @staticmethod
+    def specs(batch_axis="data"):
+        return SSMState(P(batch_axis, None, "model"),
+                        P(batch_axis, "model", None, None), P())
+
+
+def mamba2(params, x, *, head_dim: int = 64, expand: int = 2,
+           d_state: int = 128, chunk: int = 256):
+    """Chunked SSD forward.  x: (B, L, D) -> (B, L, D)."""
+    b, l, d = x.shape
+    proj = x @ params["w_in"]
+    xbc, z, dt, d_inner, n_heads = _split_proj(params, proj, d, head_dim,
+                                               expand, d_state)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(b, l, n_heads, head_dim)  # (B,L,H,P)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    # log decay per step: la[t] = dt[t] * a  (negative)
+    la = dt * a[None, None]  # (B,L,H)
+    xdt = xh * dt[..., None].astype(xh.dtype)  # fold dt into input
+
+    nq = -(-l // chunk)
+    lp = nq * chunk
+    pad = lambda t: jnp.pad(t, ((0, 0), (0, lp - l)) + ((0, 0),) * (t.ndim - 2))
+    xdt_c = pad(xdt).reshape(b, nq, chunk, n_heads, head_dim)
+    b_c = pad(bmat).reshape(b, nq, chunk, d_state)
+    c_c = pad(cmat).reshape(b, nq, chunk, d_state)
+    la_c = pad(la).reshape(b, nq, chunk, n_heads)
+
+    # Within-chunk cumulative log-decay (inclusive) and chunk totals.
+    cum = jnp.cumsum(la_c, axis=2)              # (B,nq,Q,H)
+    tot = cum[:, :, -1]                          # (B,nq,H)
+
+    # ---- intra-chunk (quadratic within chunk): y_intra[t] =
+    #   sum_{s<=t} C_t.B_s * exp(cum[t]-cum[s]) * xdt[s]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nq,T,S,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gm = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    cb = jnp.einsum("bqtn,bqsn->bqts", c_c, b_c)  # (B,nq,T,S)
+    y_intra = jnp.einsum("bqts,bqtsh,bqshp->bqthp", cb.astype(jnp.float32),
+                         gm, xdt_c.astype(jnp.float32))
+
+    # ---- chunk-final states: S_q = sum_s exp(tot - cum[s]) B_s xdt_s^T
+    state_w = jnp.exp(tot[:, :, None, :] - cum)  # (B,nq,S,H)
+    chunk_states = jnp.einsum("bqsn,bqsh,bqshp->bqhpn", b_c.astype(jnp.float32),
+                              state_w, xdt_c.astype(jnp.float32))
+
+    # ---- inter-chunk scan: H_q = exp(tot_q) H_{q-1} + S_q  (associative)
+    def combine(left, right):
+        (gl, sl), (gr, sr) = left, right
+        return gl * gr, sl * gr[..., None, None] + sr
+
+    gains = jnp.exp(tot).transpose(1, 0, 2)  # (nq,B,H)
+    states = chunk_states.transpose(1, 0, 2, 3, 4)  # (nq,B,H,P,N)
+    g_sc, s_sc = jax.lax.associative_scan(combine, (gains, states))
+    # exclusive prefix: state entering chunk q
+    init = jnp.zeros_like(s_sc[:1])
+    s_in = jnp.concatenate([init, s_sc[:-1]], 0).transpose(1, 0, 2, 3, 4)
+
+    # ---- inter-chunk contribution: y_inter[t] = exp(cum[t]) C_t . H_in
+    y_inter = jnp.einsum("bqtn,bqth,bqhpn->bqthp", c_c.astype(jnp.float32),
+                         jnp.exp(cum), s_in)
+
+    y = (y_intra + y_inter).reshape(b, lp, n_heads, head_dim)[:, :l]
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    # Gated RMSNorm (mamba2's norm-before-out with z gate).
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = y * params["norm_scale"][None, None]
+    return y @ params["w_out"]
+
+
+def mamba2_init_state(batch: int, d_model: int, *, head_dim: int = 64,
+                      expand: int = 2, d_state: int = 128, d_conv: int = 4,
+                      dtype=jnp.float32) -> SSMState:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return SSMState(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner + 2 * d_state), dtype),
+        ssm=jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_step(params, x, state: SSMState, *, head_dim: int = 64,
+                expand: int = 2, d_state: int = 128):
+    """Single-token recurrent decode.  x: (B, 1, D)."""
+    b, _, d = x.shape
+    proj = x[:, 0] @ params["w_in"]
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    xbc, z, dt = jnp.split(proj, [d_inner + 2 * d_state,
+                                  2 * d_inner + 2 * d_state], axis=-1)
+    # conv ring: append, convolve last d_conv entries
+    hist = jnp.concatenate([state.conv, xbc[:, None]], 1)  # (B, d_conv, C)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu((hist * w[None]).sum(1) + params["conv_b"][None])
+    xs, bvec, cvec = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(b, n_heads, head_dim)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    gain = jnp.exp(dtv * a[None])  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", bvec.astype(jnp.float32),
+                     (xh * dtv[..., None].astype(xh.dtype)).astype(jnp.float32))
+    new_ssm = state.ssm * gain[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cvec.astype(jnp.float32), new_ssm)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = y * params["norm_scale"][None]
+    out = (y @ params["w_out"])[:, None]
+    return out, SSMState(hist[:, 1:], new_ssm, state.length + 1)

@@ -1,0 +1,116 @@
+"""Model configuration — one dataclass drives every assigned architecture.
+
+A model is a stack of *units*; each unit is a fixed pattern of blocks
+(e.g. ``("rglru", "rglru", "local_attn")`` for recurrentgemma's 2:1
+hybrid).  Homogeneous unit stacks are parameter-stacked and executed with
+``lax.scan`` so compile time is depth-independent (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int = 0
+    kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: Optional[int] = None
+
+    # Block pattern (cycled to fill n_layers; remainder becomes a tail).
+    pattern: Tuple[str, ...] = ("attn",)
+    window: Optional[int] = None          # local_attn window
+    mlp_kind: str = "swiglu"
+
+    # Attention flavor flags
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+
+    # MoE (block type "attn" uses MoE FFN when n_experts > 0)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    moe_sharding: str = "replicated_gather"   # | "tensor_parallel"
+    moe_group_size: int = 1024
+
+    # SSM (mamba2)
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_state: int = 128
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+
+    # Encoder-decoder (audio / seq2seq)
+    enc_layers: int = 0                   # >0 => enc-dec model
+    modality: str = "text"                # text | audio | vision
+    frontend_len: int = 0                 # stub frontend sequence length
+
+    # Numerics / execution
+    param_dtype: str = "float32"
+    activ_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tied_embeddings: bool = True
+    remat: bool = True
+    attn_impl: str = "auto"               # auto | dense | chunked | flash
+    attn_chunk_threshold: int = 8192      # auto: switch to chunked above
+    attn_chunk_q: int = 1024
+    attn_chunk_k: int = 1024
+    opt_state_dtype: str = "float32"      # bf16 for grok-scale models
+    microbatches: int = 1                 # gradient-accumulation per step
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> Tuple[str, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no *global* full attention appears (long_500k runnable)."""
+        blocks = set(self.pattern) | set(self.tail)
+        return "attn" not in blocks
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        counts = {"embed": v * d * (1 if self.tied_embeddings else 2)}
+        per = {}
+        per["attn"] = d * hd * (self.n_heads + 2 * self.kv_heads) + self.n_heads * hd * d
+        per["local_attn"] = per["attn"]
+        if self.n_experts:
+            ff = self.moe_d_ff or f
+            per["attn"] += d * self.n_experts + 3 * self.n_experts * d * ff \
+                + (3 * d * ff * self.n_shared_experts)
+        elif f:
+            mlp = 3 * d * f if self.mlp_kind in ("swiglu", "geglu") else 2 * d * f
+            per["attn"] += mlp
+            per["local_attn"] += mlp
+        din = self.ssm_expand * d
+        nh = din // self.ssm_head_dim
+        per["mamba2"] = d * (2 * din + 2 * self.ssm_state + nh) + din * d \
+            + self.ssm_conv * (din + 2 * self.ssm_state)
+        per["rglru"] = 2 * d * d + 3 * d * d + d * d  # w_x,w_gate,w_a,w_i,w_out ~5d^2
+        if f:
+            per["rglru"] += 3 * d * f if self.mlp_kind in ("swiglu", "geglu") else 2 * d * f
+        blocks = list(self.pattern) * self.n_units + list(self.tail)
+        total = counts["embed"] + sum(per.get(b, 0) for b in blocks)
+        if self.enc_layers:
+            total += self.enc_layers * per["attn"]  # encoder stack
+            total += self.n_layers * per["attn"] // max(self.n_layers, 1) * 0
+        return total

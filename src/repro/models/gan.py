@@ -1,0 +1,235 @@
+"""Generative models from the paper's evaluation — DCGAN, pix2pix, FSRCNN,
+StyleTransfer — with every TCONV layer running through MM2IM.
+
+These are the end-to-end vehicles for Tables II/IV: the generator forward
+is `method`-switchable ('mm2im' fused kernel vs baselines), and the DCGAN
+discriminator + GAN losses support examples/train_dcgan.py.
+
+Layout: NHWC, HWOI tconv weights (paper convention), NCHW nowhere.
+Norms: batch statistics computed inline (running averages omitted — the
+paper runs inference on quantized frozen models where BN is folded anyway).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ops import tconv
+
+
+def _conv_init(key, ks, cin, cout, scale=0.02):
+    return jax.random.normal(key, (ks, ks, cin, cout), jnp.float32) * scale
+
+
+def _tconv_init(key, ks, cout, cin, scale=0.02):
+    return jax.random.normal(key, (ks, ks, cout, cin), jnp.float32) * scale
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(x, w, (stride, stride), padding,
+                                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(x, eps=1e-5):
+    mu = x.mean((0, 1, 2), keepdims=True)
+    var = x.var((0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+# ---------------------------------------------------------------------------
+# DCGAN (paper Table II/IV layer stack: 4->8->16->32, 1024->512->256->128->3)
+# ---------------------------------------------------------------------------
+
+DCGAN_LAYERS = [  # (oc, ks, ih, ic, stride) — Table II rows DCGAN_1..4
+    (512, 5, 4, 1024, 2),
+    (256, 5, 8, 512, 2),
+    (128, 5, 16, 256, 2),
+    (3, 5, 32, 128, 2),
+]
+
+
+def init_dcgan_g(key, z_dim: int = 100, base: int = 1024, out_ch: int = 3,
+                 scale_down: int = 1):
+    """DCGAN generator.  scale_down shrinks channel widths for CPU tests."""
+    b = base // scale_down
+    ks = jax.random.split(key, 6)
+    params = {
+        "proj": jax.random.normal(ks[0], (z_dim, 4 * 4 * b), jnp.float32) * 0.02,
+        "t1": _tconv_init(ks[1], 5, b // 2, b),
+        "t2": _tconv_init(ks[2], 5, b // 4, b // 2),
+        "t3": _tconv_init(ks[3], 5, b // 8, b // 4),
+        "t4": _tconv_init(ks[4], 5, out_ch, b // 8),
+        "b1": jnp.zeros((b // 2,)), "b2": jnp.zeros((b // 4,)),
+        "b3": jnp.zeros((b // 8,)), "b4": jnp.zeros((out_ch,)),
+    }
+    specs = {
+        "proj": P("data", "model"),
+        "t1": P(None, None, "model", "data"), "t2": P(None, None, "model", "data"),
+        "t3": P(None, None, "model", "data"), "t4": P(None, None, None, "data"),
+        "b1": P("model"), "b2": P("model"), "b3": P("model"), "b4": P(None),
+    }
+    return params, specs
+
+
+def dcgan_generator(params, z, *, method: str = "mm2im"):
+    """z: (B, z_dim) -> images (B, 64, 64, 3) in [-1, 1]."""
+    b = z.shape[0]
+    base = params["t1"].shape[3]
+    x = (z @ params["proj"]).reshape(b, 4, 4, base)
+    x = jax.nn.relu(batchnorm(x))
+    for i in (1, 2, 3):
+        x = tconv(x, params[f"t{i}"], params[f"b{i}"], stride=2, method=method)
+        x = jax.nn.relu(batchnorm(x))
+    x = tconv(x, params["t4"], params["b4"], stride=2, method=method)
+    return jnp.tanh(x)
+
+
+def init_dcgan_d(key, in_ch: int = 3, base: int = 64, img_size: int = 64):
+    ks = jax.random.split(key, 5)
+    flat = (img_size // 4) ** 2 * base * 4  # two stride-2 convs
+    params = {
+        "c1": _conv_init(ks[0], 5, in_ch, base),
+        "c2": _conv_init(ks[1], 5, base, base * 2),
+        "c3": _conv_init(ks[2], 5, base * 2, base * 4),
+        "head": jax.random.normal(ks[3], (flat, 1), jnp.float32) * 0.02,
+    }
+    specs = {"c1": P(None, None, None, "model"), "c2": P(None, None, None, "model"),
+             "c3": P(None, None, None, "model"), "head": P("model", None)}
+    return params, specs
+
+
+def dcgan_discriminator(params, img):
+    x = jax.nn.leaky_relu(conv2d(img, params["c1"], 2), 0.2)
+    x = jax.nn.leaky_relu(batchnorm(conv2d(x, params["c2"], 2)), 0.2)
+    x = jax.nn.leaky_relu(batchnorm(conv2d(x, params["c3"], 1)), 0.2)
+    return x.reshape(x.shape[0], -1) @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# pix2pix U-Net generator (8 down / 8 up, Ks=4, S=2) — Table IV
+# ---------------------------------------------------------------------------
+
+
+def init_pix2pix_g(key, in_ch: int = 3, out_ch: int = 3, base: int = 64,
+                   depth: int = 8, scale_down: int = 1):
+    b = max(base // scale_down, 4)
+    enc_chs = [min(b * (2 ** i), b * 8) for i in range(depth)]
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    ks = jax.random.split(key, 2 * depth + 1)
+    cin = in_ch
+    for i, c in enumerate(enc_chs):
+        params[f"e{i}"] = _conv_init(ks[i], 4, cin, c)
+        specs[f"e{i}"] = P(None, None, None, "model")
+        cin = c
+    for i in range(depth):
+        skip = enc_chs[depth - 2 - i] if i < depth - 1 else out_ch
+        cout = skip if i < depth - 1 else out_ch
+        cin_up = enc_chs[depth - 1 - i] * (1 if i == 0 else 2)
+        params[f"d{i}"] = _tconv_init(ks[depth + i], 4, cout, cin_up)
+        specs[f"d{i}"] = P(None, None, "model", "data")
+        params[f"db{i}"] = jnp.zeros((cout,))
+        specs[f"db{i}"] = P("model") if i < depth - 1 else P(None)
+    return params, specs
+
+
+def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8):
+    """U-Net: img (B, 2^depth, 2^depth, C) -> (B, same, same, out_ch)."""
+    skips = []
+    x = img
+    for i in range(depth):
+        x = conv2d(x, params[f"e{i}"], 2)
+        if i > 0:
+            x = batchnorm(x)
+        skips.append(x)
+        x = jax.nn.leaky_relu(x, 0.2)
+    x = jax.nn.relu(skips[-1])
+    for i in range(depth):
+        x = tconv(x, params[f"d{i}"], params[f"db{i}"], stride=2, method=method)
+        if i < depth - 1:
+            x = batchnorm(x)
+            x = jnp.concatenate([jax.nn.relu(x), skips[depth - 2 - i]], -1)
+    return jnp.tanh(x)
+
+
+# ---------------------------------------------------------------------------
+# FSRCNN (super-resolution; final Ks=9 TCONV does the upscale) — Table II
+# ---------------------------------------------------------------------------
+
+
+def init_fsrcnn(key, d: int = 32, s: int = 5, m: int = 2, upscale: int = 3,
+                in_ch: int = 1):
+    ks = jax.random.split(key, m + 4)
+    params = {
+        "feat": _conv_init(ks[0], 5, in_ch, d),
+        "shrink": _conv_init(ks[1], 1, d, s),
+        "expand": _conv_init(ks[2], 1, s, d),
+        "deconv": _tconv_init(ks[3], 9, in_ch, d),
+        "db": jnp.zeros((in_ch,)),
+    }
+    specs = {k: P(None) for k in params}
+    for i in range(m):
+        params[f"map{i}"] = _conv_init(ks[4 + i], 3, s, s)
+        specs[f"map{i}"] = P(None)
+    return params, specs
+
+
+def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im"):
+    x = jax.nn.relu(conv2d(img, params["feat"]))
+    x = jax.nn.relu(conv2d(x, params["shrink"]))
+    i = 0
+    while f"map{i}" in params:
+        x = jax.nn.relu(conv2d(x, params[f"map{i}"]))
+        i += 1
+    x = jax.nn.relu(conv2d(x, params["expand"]))
+    return tconv(x, params["deconv"], params["db"], stride=upscale,
+                 padding="SAME", method=method)
+
+
+# ---------------------------------------------------------------------------
+# Johnson style-transfer network (2 TCONV upsamples + 9x9 output) — Table II
+# ---------------------------------------------------------------------------
+
+
+def init_styletransfer(key, base: int = 32, n_res: int = 5):
+    ks = jax.random.split(key, n_res * 2 + 6)
+    params = {
+        "c1": _conv_init(ks[0], 9, 3, base),
+        "c2": _conv_init(ks[1], 3, base, base * 2),
+        "c3": _conv_init(ks[2], 3, base * 2, base * 4),
+        "t1": _tconv_init(ks[3], 3, base * 2, base * 4),
+        "tb1": jnp.zeros((base * 2,)),
+        "t2": _tconv_init(ks[4], 3, base, base * 2),
+        "tb2": jnp.zeros((base,)),
+        "out": _tconv_init(ks[5], 9, 3, base),  # 9x9 S=1 TCONV (Table II row 3)
+        "ob": jnp.zeros((3,)),
+    }
+    specs = {k: P(None) for k in params}
+    for i in range(n_res):
+        params[f"r{i}a"] = _conv_init(ks[6 + 2 * i], 3, base * 4, base * 4)
+        params[f"r{i}b"] = _conv_init(ks[7 + 2 * i], 3, base * 4, base * 4)
+        specs[f"r{i}a"] = specs[f"r{i}b"] = P(None)
+    return params, specs
+
+
+def styletransfer(params, img, *, method: str = "mm2im"):
+    x = jax.nn.relu(batchnorm(conv2d(img, params["c1"])))
+    x = jax.nn.relu(batchnorm(conv2d(x, params["c2"], 2)))
+    x = jax.nn.relu(batchnorm(conv2d(x, params["c3"], 2)))
+    i = 0
+    while f"r{i}a" in params:
+        h = jax.nn.relu(batchnorm(conv2d(x, params[f"r{i}a"])))
+        x = x + batchnorm(conv2d(h, params[f"r{i}b"]))
+        i += 1
+    x = jax.nn.relu(batchnorm(tconv(x, params["t1"], params["tb1"], stride=2,
+                                    method=method)))
+    x = jax.nn.relu(batchnorm(tconv(x, params["t2"], params["tb2"], stride=2,
+                                    method=method)))
+    x = tconv(x, params["out"], params["ob"], stride=1, method=method)
+    return jnp.tanh(x)

@@ -1,0 +1,153 @@
+"""AdamW + schedules + clipping + grad accumulation — self-contained.
+
+Optimizer state is sharded identically to the parameters (the specs tree is
+reused leaf-for-leaf), i.e. ZeRO-style: each device holds only its shard of
+m/v.  ``state_dtype='bfloat16'`` halves optimizer HBM for 314B-scale runs
+(grok config) at a documented precision cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        if cfg.warmup_steps <= 0:
+            warm = 1.0
+        else:
+            warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            decay = jnp.maximum(
+                1.0 - (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0)
+        else:
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                            0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * decay
+    return sched
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def state_specs(param_specs) -> AdamWState:
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """One AdamW update.  Returns (new_params, new_state, metrics)."""
+    sched = make_schedule(cfg)
+    step = state.step + 1
+    lr = sched(state.step)
+
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        vf = v.astype(jnp.float32) * cfg.b2 + jnp.square(gf) * (1 - cfg.b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation (microbatching) helper
+# ---------------------------------------------------------------------------
+
+
+def accumulate(loss_and_grad_fn, n_micro: int, *, has_aux: bool = False):
+    """Wrap a (params, batch)->((loss[, aux]), grads) fn to accumulate over
+    ``n_micro`` microbatches split along the leading batch dim.
+
+    This is the activation-memory lever for the big train cells: peak
+    transients (attention scores, MoE capacity tensors, saved residuals)
+    scale with the microbatch, so n_micro=8 cuts grok-1's 48 GiB of
+    temps to ~6 GiB at unchanged math (EXPERIMENTS §Perf C-final)."""
+    if n_micro <= 1:
+        return loss_and_grad_fn
+
+    def wrapped(params, batch):
+        def slice_mb(x, i):
+            sz = x.shape[0] // n_micro
+            return jax.lax.dynamic_slice_in_dim(x, i * sz, sz)
+
+        def run(i):
+            mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            return loss_and_grad_fn(params, mb)
+
+        out0, g0 = run(0)
+
+        def micro(i, carry):
+            out_acc, grad_acc = carry
+            out, grads = run(i)
+            return (jax.tree.map(jnp.add, out_acc, out),
+                    jax.tree.map(jnp.add, grad_acc, grads))
+
+        out, grads = jax.lax.fori_loop(1, n_micro, micro, (out0, g0))
+        inv = 1.0 / n_micro
+        return (jax.tree.map(lambda x: x * inv, out),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    return wrapped

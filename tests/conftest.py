@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess); make sure src/ is importable regardless of cwd.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

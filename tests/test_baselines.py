@@ -1,0 +1,55 @@
+"""Zero-Insertion and TDC baselines vs the lax gold oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.baselines import (tdc_macs, tdc_tconv,
+                                     zero_insertion_macs, zero_insertion_tconv)
+
+RNG = np.random.default_rng(3)
+
+CASES = [
+    (1, 2, 2, 2, 3, 2, 1, "SAME"), (2, 4, 4, 3, 5, 2, 2, "SAME"),
+    (1, 9, 9, 8, 5, 8, 2, "SAME"), (1, 4, 4, 8, 7, 5, 2, "SAME"),
+    (1, 3, 3, 4, 3, 2, 1, "VALID"), (1, 4, 5, 4, 5, 3, 2, "VALID"),
+    (1, 6, 6, 4, 2, 3, 2, "SAME"), (1, 8, 8, 4, 9, 3, 1, "SAME"),
+    (1, 5, 5, 4, 4, 2, 4, "VALID"),
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_baselines_match_gold(case):
+    b, ih, iw, ic, ks, oc, s, pad = case
+    x = RNG.standard_normal((b, ih, iw, ic), np.float32)
+    w = RNG.standard_normal((ks, ks, oc, ic), np.float32)
+    gold = np.asarray(ref.tconv_lax(x, w, stride=s, padding=pad))
+    zi = np.asarray(zero_insertion_tconv(x, w, stride=s, padding=pad))
+    td = np.asarray(tdc_tconv(x, w, stride=s, padding=pad))
+    np.testing.assert_allclose(zi, gold, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(td, gold, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ih=st.integers(2, 9), ic=st.integers(1, 8), ks=st.integers(1, 6),
+       oc=st.integers(1, 6), s=st.integers(1, 3))
+def test_tdc_property(ih, ic, ks, oc, s):
+    if ks < s:
+        return
+    x = RNG.standard_normal((1, ih, ih, ic), np.float32)
+    w = RNG.standard_normal((ks, ks, oc, ic), np.float32)
+    gold = np.asarray(ref.tconv_lax(x, w, stride=s))
+    td = np.asarray(tdc_tconv(x, w, stride=s))
+    np.testing.assert_allclose(td, gold, rtol=1e-3, atol=1e-3)
+
+
+def test_mac_counters_ordering():
+    """TDC is MAC-optimal-ish; zero-insertion is the most wasteful."""
+    from repro.core.maps import TConvProblem, drop_stats
+    p = TConvProblem(16, 16, 32, 5, 16, 2)
+    effectual = drop_stats(p)["effectual_macs"]
+    zi = zero_insertion_macs(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride)
+    td = tdc_macs(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride)
+    assert effectual <= td <= zi
+    assert zi > 2 * effectual  # most of the dense conv hits inserted zeros

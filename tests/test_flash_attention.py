@@ -1,0 +1,97 @@
+"""Flash-attention Pallas kernel vs oracles (interpret mode).
+
+Sweeps GQA ratios, causal/window, ragged lengths and block shapes, plus a
+hypothesis property sweep; also asserts the model-level attend_flash path
+matches attend exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.layers import attention as att
+
+RNG = np.random.default_rng(7)
+
+
+def _ref(q, k, v, causal=True, window=None):
+    b, lq, h, hd = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, lq, hkv, h // hkv, hd)
+    sc = np.einsum("blgrd,bmgd->bgrlm", qg, k) / np.sqrt(hd)
+    i = np.arange(lq)[:, None]
+    j = np.arange(k.shape[1])[None, :]
+    m = np.ones((lq, k.shape[1]), bool)
+    if causal:
+        m &= j <= i
+    if window is not None:
+        m &= j > i - window
+    sc = np.where(m[None, None, None], sc, -2e38)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bgrlm,bmgd->blgrd", p, v).reshape(b, lq, h, hd)
+
+
+CASES = [
+    # (B, L, H, Hkv, hd, causal, window, bq, bk)
+    (1, 64, 4, 2, 16, True, None, 16, 16),
+    (2, 100, 8, 2, 32, True, None, 32, 16),   # ragged L
+    (1, 128, 4, 4, 16, False, None, 32, 32),  # MHA, bidirectional
+    (1, 96, 4, 1, 16, True, 24, 16, 16),      # MQA + window
+    (1, 257, 6, 2, 8, True, None, 64, 32),    # odd length
+    (1, 64, 2, 2, 64, True, None, 64, 64),    # single block pair
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_flash_vs_reference(case):
+    b, l, h, kv, hd, causal, win, bq, bk = case
+    q = RNG.standard_normal((b, l, h, hd), np.float32) * 0.3
+    k = RNG.standard_normal((b, l, kv, hd), np.float32) * 0.3
+    v = RNG.standard_normal((b, l, kv, hd), np.float32) * 0.3
+    got = np.asarray(flash_attention(q, k, v, causal=causal, window=win,
+                                     block_q=bq, block_k=bk, interpret=True))
+    np.testing.assert_allclose(got, _ref(q, k, v, causal, win),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(l=st.integers(8, 80), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), causal=st.booleans(),
+       bq=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16]))
+def test_flash_property(l, h, kv, causal, bq, bk):
+    if h % kv:
+        return
+    q = RNG.standard_normal((1, l, h, 8), np.float32) * 0.3
+    k = RNG.standard_normal((1, l, kv, 8), np.float32) * 0.3
+    v = RNG.standard_normal((1, l, kv, 8), np.float32) * 0.3
+    got = np.asarray(flash_attention(q, k, v, causal=causal, block_q=bq,
+                                     block_k=bk, interpret=True))
+    np.testing.assert_allclose(got, _ref(q, k, v, causal), rtol=3e-5, atol=3e-5)
+
+
+def test_attend_flash_matches_attend():
+    d, heads, kvh = 32, 4, 2
+    p, _ = att.init_attention(jax.random.PRNGKey(0), d, heads, kvh,
+                              qk_norm=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, d)) * 0.5
+    y1 = att.attend(p, x, n_heads=heads, kv_heads=kvh)
+    y2 = att.attend_flash(p, x, n_heads=heads, kv_heads=kvh,
+                          block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q = (RNG.standard_normal((1, 64, 4, 16)) * 0.3).astype(jnp.bfloat16)
+    k = (RNG.standard_normal((1, 64, 2, 16)) * 0.3).astype(jnp.bfloat16)
+    v = (RNG.standard_normal((1, 64, 2, 16)) * 0.3).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    want = _ref(np.asarray(q, np.float32), np.asarray(k, np.float32),
+                np.asarray(v, np.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=3e-2, atol=3e-2)
+    assert got.dtype == jnp.bfloat16

@@ -1,0 +1,52 @@
+"""HLO collective/FLOP parser unit tests on synthetic module text."""
+
+from repro.distributed import hlo
+
+MODULE = """
+HloModule jit_step
+
+%fused_computation (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  ROOT %m = f32[64,128]{1,0} multiply(%p0, %p0)
+}
+
+%body (arg: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %arg = (s32[], f32[64,128]) parameter(0)
+  %g = f32[64,128]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[64,128]{1,0} all-reduce(%g), replica_groups={}, to_apply=%sum
+  %ag = f32[128,128]{1,0} all-gather(%ar), dimensions={0}
+  %i = s32[] get-tuple-element(%arg), index=0
+  ROOT %t = (s32[], f32[64,128]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[64,128], b: f32[128,256]) -> f32[64,256] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %b = f32[128,256]{1,0} parameter(1)
+  %t0 = (s32[], f32[64,128]) tuple(%c, %a)
+  %w = (s32[], f32[64,128]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %cp = f32[64,128]{1,0} collective-permute(%a), source_target_pairs={{0,1}}
+  ROOT %d = f32[64,256]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_collective_bytes_weighted_by_trip_count():
+    out = hlo.collective_bytes(MODULE)
+    # all-reduce operand: 64*128*4 = 32768 bytes, x10 trips
+    assert out["all-reduce"] == 32768 * 10
+    # all-gather operand = the all-reduce result (same shape), x10
+    assert out["all-gather"] == 32768 * 10
+    # permute in entry: x1
+    assert out["collective-permute"] == 32768
+    assert out["total"] == 32768 * 21
+
+
+def test_collective_count():
+    c = hlo.collective_count(MODULE)
+    assert c == {"all-reduce": 1, "all-gather": 1, "collective-permute": 1}
+
+
+def test_weighted_dot_flops():
+    out = hlo.weighted_cost(MODULE)
+    # dot: 2 * 64*256 * 128 (entry, weight 1)
+    assert out["weighted_dot_flops"] == 2 * 64 * 256 * 128

@@ -1,0 +1,115 @@
+"""Layer-level invariants: recurrences vs step decodes, attention paths, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import attention as att
+from repro.layers import moe as moe_mod
+from repro.layers import rglru, ssm
+
+K = jax.random.PRNGKey(0)
+D, B, L = 32, 2, 48
+X = jax.random.normal(jax.random.PRNGKey(1), (B, L, D)) * 0.5
+
+
+def test_mamba2_chunked_equals_stepwise():
+    p, _ = ssm.init_mamba2(K, D, head_dim=8, expand=2, d_state=16)
+    y = ssm.mamba2(p, X, head_dim=8, expand=2, d_state=16, chunk=16)
+    st = ssm.mamba2_init_state(B, D, head_dim=8, expand=2, d_state=16)
+    ys = []
+    for t in range(L):
+        o, st = ssm.mamba2_step(p, X[:, t:t + 1], st, head_dim=8, expand=2,
+                                d_state=16)
+        ys.append(o)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 48])
+def test_mamba2_chunk_size_invariance(chunk):
+    p, _ = ssm.init_mamba2(K, D, head_dim=8, expand=2, d_state=16)
+    base = ssm.mamba2(p, X, head_dim=8, expand=2, d_state=16, chunk=12)
+    y = ssm.mamba2(p, X, head_dim=8, expand=2, d_state=16, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(y), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    p, _ = rglru.init_rglru_block(jax.random.PRNGKey(2), D, d_rnn=24)
+    y = rglru.rglru_block(p, X)
+    st = rglru.rglru_init_state(B, 24)
+    ys = []
+    for t in range(L):
+        o, st = rglru.rglru_step(p, X[:, t:t + 1], st)
+        ys.append(o)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """|a_t| < 1 always (stability of the recurrence)."""
+    p, _ = rglru.init_rglru_block(jax.random.PRNGKey(3), D)
+    u = X @ p["w_x"]
+    log_a, _ = rglru._gates(p, u)
+    assert (np.asarray(log_a) < 0).all()
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_attention_chunked_equals_full(window):
+    p, _ = att.init_attention(jax.random.PRNGKey(3), D, 4, 2, qk_norm=True)
+    y1 = att.attend(p, X, n_heads=4, kv_heads=2, window=window)
+    y2 = att.attend_chunked(p, X, n_heads=4, kv_heads=2, window=window,
+                            chunk_q=16, chunk_k=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_attention_decode_equals_full():
+    p, _ = att.init_attention(jax.random.PRNGKey(4), D, 4, 2, qkv_bias=True)
+    y = att.attend(p, X, n_heads=4, kv_heads=2)
+    cache = att.KVCache.empty(B, L, 2, D // 4, dtype=jnp.float32)
+    outs = []
+    for t in range(L):
+        o, cache = att.decode_step(p, X[:, t:t + 1], cache, n_heads=4,
+                                   kv_heads=2)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_decode_ring_buffer():
+    """Ring cache (window) must equal full attention with the same window."""
+    w = 8
+    p, _ = att.init_attention(jax.random.PRNGKey(5), D, 4, 2)
+    y = att.attend(p, X, n_heads=4, kv_heads=2, window=w)
+    cache = att.KVCache.empty(B, w, 2, D // 4, dtype=jnp.float32)
+    outs = []
+    for t in range(L):
+        o, cache = att.decode_step(p, X[:, t:t + 1], cache, n_heads=4,
+                                   kv_heads=2, window=w)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_differentiable_and_balanced():
+    p, _ = moe_mod.init_moe(jax.random.PRNGKey(6), D, 64, 8, 2, n_shared=1,
+                            shared_d_ff=64)
+    out, aux = moe_mod.moe(p, X, top_k=2)
+    assert out.shape == X.shape
+    assert float(aux) > 0
+    g = jax.grad(lambda pp: moe_mod.moe(pp, X, top_k=2)[0].sum())(p)
+    assert not any(bool(jnp.isnan(v).any()) for v in jax.tree.leaves(g))
+
+
+def test_moe_capacity_drops_are_the_only_difference():
+    """With capacity >> needed, grouped routing is exact vs huge capacity."""
+    p, _ = moe_mod.init_moe(jax.random.PRNGKey(7), D, 32, 4, 2)
+    y1, _ = moe_mod.moe(p, X, top_k=2, capacity_factor=64.0)
+    y2, _ = moe_mod.moe(p, X, top_k=2, capacity_factor=64.0, group_size=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)

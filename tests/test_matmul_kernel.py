@@ -1,0 +1,52 @@
+"""Tiled matmul Pallas kernel vs jnp.dot (shape/dtype sweep + property)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.matmul_pallas import matmul
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (64, 64, 64, 32, 32, 32),
+    (100, 70, 50, 32, 16, 32),     # ragged everything
+    (8, 256, 16, 8, 16, 64),
+    (128, 128, 128, 128, 128, 128),  # single block
+])
+def test_matmul_f32(m, k, n, bm, bn, bk):
+    a = RNG.standard_normal((m, k), np.float32)
+    b = RNG.standard_normal((k, n), np.float32)
+    got = np.asarray(matmul(a, b, block_m=bm, block_n=bn, block_k=bk,
+                            interpret=True))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_int8_exact():
+    a = RNG.integers(-128, 128, (48, 96), dtype=np.int8)
+    b = RNG.integers(-128, 128, (96, 32), dtype=np.int8)
+    got = np.asarray(matmul(jnp.asarray(a), jnp.asarray(b), block_m=16,
+                            block_n=16, block_k=32, interpret=True))
+    want = a.astype(np.int32) @ b.astype(np.int32)
+    assert (got == want).all() and got.dtype == np.int32
+
+
+def test_matmul_bf16():
+    a = (RNG.standard_normal((64, 64)) * 0.5).astype(jnp.bfloat16)
+    b = (RNG.standard_normal((64, 64)) * 0.5).astype(jnp.bfloat16)
+    got = np.asarray(matmul(a, b, block_m=32, block_n=32, block_k=32,
+                            interpret=True), np.float32)
+    want = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70))
+def test_matmul_property(m, k, n):
+    a = RNG.standard_normal((m, k), np.float32)
+    b = RNG.standard_normal((k, n), np.float32)
+    got = np.asarray(matmul(a, b, block_m=32, block_n=32, block_k=32,
+                            interpret=True))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,176 @@
+"""Per-kernel validation: MM2IM Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes / strides / paddings / dtypes / block sizes / grid orders and
+asserts allclose against ref.py; hypothesis drives randomized geometry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.mm2im_pallas import mm2im_tconv, plan_blocks
+from repro.kernels.ops import tconv, tconv_int8
+
+RNG = np.random.default_rng(0)
+
+
+def rand_problem(ih, iw, ic, ks, oc, b=1):
+    x = RNG.standard_normal((b, ih, iw, ic), np.float32)
+    w = RNG.standard_normal((ks, ks, oc, ic), np.float32) * 0.1
+    return x, w
+
+
+SWEEP = [
+    # (B, Ih, Iw, Ic, Ks, Oc, S, padding)
+    (1, 2, 2, 2, 3, 2, 1, "SAME"),      # paper Fig. 2
+    (2, 4, 4, 3, 5, 2, 2, "SAME"),
+    (1, 7, 7, 32, 3, 16, 1, "SAME"),
+    (1, 9, 9, 16, 5, 8, 2, "SAME"),
+    (2, 5, 6, 4, 4, 3, 2, "SAME"),      # rectangular, even kernel
+    (1, 4, 4, 8, 7, 5, 2, "SAME"),
+    (1, 8, 8, 16, 9, 3, 1, "SAME"),     # StyleTransfer_3-like
+    (1, 3, 3, 4, 3, 2, 1, "VALID"),
+    (1, 4, 5, 4, 5, 3, 2, "VALID"),
+    (1, 5, 5, 4, 3, 2, 3, "VALID"),     # Ks < S (gapped output)
+    (1, 6, 6, 4, 2, 3, 2, "SAME"),      # Ks == S (no crop)
+    (1, 1, 1, 21, 4, 21, 2, "SAME"),    # FCN row (1x1 spatial)
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(c) for c in SWEEP])
+def test_mm2im_vs_oracles(case):
+    b, ih, iw, ic, ks, oc, s, pad = case
+    x, w = rand_problem(ih, iw, ic, ks, oc, b)
+    got = np.asarray(mm2im_tconv(x, w, stride=s, padding=pad, interpret=True))
+    want_iom = np.asarray(ref.iom_reference(x, w, stride=s, padding=pad))
+    want_lax = np.asarray(ref.tconv_lax(x, w, stride=s, padding=pad))
+    np.testing.assert_allclose(got, want_iom, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(want_iom, want_lax, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ih=st.integers(1, 10), iw=st.integers(1, 10),
+    ic=st.integers(1, 16), ks=st.integers(1, 7),
+    oc=st.integers(1, 12), s=st.integers(1, 3),
+    padding=st.sampled_from(["SAME", "VALID"]),
+)
+def test_mm2im_property_random_geometry(ih, iw, ic, ks, oc, s, padding):
+    if padding == "SAME" and ks < s:
+        return  # unsupported contract (asserted elsewhere)
+    x, w = rand_problem(ih, iw, ic, ks, oc)
+    got = np.asarray(mm2im_tconv(x, w, stride=s, padding=padding,
+                                 interpret=True))
+    want = np.asarray(ref.iom_reference(x, w, stride=s, padding=padding))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_oh,block_oc", [(2, 4), (4, 8), (8, 16), (2, 3)])
+def test_block_size_invariance(block_oh, block_oc):
+    x, w = rand_problem(8, 8, 16, 5, 12)
+    want = np.asarray(ref.tconv_lax(x, w, stride=2))
+    got = np.asarray(mm2im_tconv(x, w, stride=2, block_oh=block_oh,
+                                 block_oc=block_oc, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("grid_order", ["bcj", "cbj"])
+def test_grid_order_invariance(grid_order):
+    x, w = rand_problem(6, 6, 8, 3, 8, b=2)
+    want = np.asarray(ref.tconv_lax(x, w, stride=2))
+    got = np.asarray(mm2im_tconv(x, w, stride=2, grid_order=grid_order,
+                                 interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    x, w = rand_problem(5, 5, 8, 3, 4)
+    got = mm2im_tconv(jnp.asarray(x, dtype), jnp.asarray(w, dtype), stride=2,
+                      interpret=True)
+    want = ref.tconv_lax(x, w, stride=2)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_int8_exact():
+    rng = np.random.default_rng(1)
+    xq = rng.integers(-128, 128, (2, 6, 6, 16), dtype=np.int8)
+    wq = rng.integers(-128, 128, (5, 5, 8, 16), dtype=np.int8)
+    bq = rng.integers(-1000, 1000, (8,), dtype=np.int32)
+    acc = ref.iom_reference_int8(xq, wq, bq, stride=2)
+    want = np.asarray(ref.requantize(acc, 0.003))
+    got = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=2))
+    assert (want == got).all()
+    assert got.dtype == np.int8
+
+
+def test_int8_accumulator_exact_int32():
+    """No requant: int32 accumulation must be bit-exact."""
+    rng = np.random.default_rng(2)
+    xq = rng.integers(-128, 128, (1, 4, 4, 32), dtype=np.int8)
+    wq = rng.integers(-128, 128, (3, 3, 8, 32), dtype=np.int8)
+    bq = np.zeros((8,), np.int32)
+    want = np.asarray(ref.iom_reference_int8(xq, wq, bq, stride=2))
+    got = np.asarray(mm2im_tconv(jnp.asarray(xq), jnp.asarray(wq),
+                                 jnp.asarray(bq), stride=2, interpret=True))
+    assert (want == got).all()
+
+
+def test_fused_epilogue_activation():
+    x, w = rand_problem(4, 4, 8, 3, 4)
+    b = RNG.standard_normal(4).astype(np.float32)
+    got = np.asarray(mm2im_tconv(x, w, jnp.asarray(b), stride=2,
+                                 activation="relu", interpret=True))
+    want = np.maximum(np.asarray(ref.tconv_lax(x, w, stride=2)) + b, 0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gradients_match_reference():
+    x, w = rand_problem(5, 5, 6, 3, 4)
+    b = np.zeros((4,), np.float32)
+
+    def loss_kernel(xx, ww, bb):
+        return jnp.sum(tconv(xx, ww, bb, stride=2, method="mm2im") ** 2)
+
+    def loss_ref(xx, ww, bb):
+        y = ref.tconv_direct(xx, ww, stride=2) + bb[None, None, None]
+        return jnp.sum(y ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_plan_blocks_fits_vmem():
+    for args in [(4, 4, 1024, 5, 512, 2), (256, 256, 32, 9, 3, 1),
+                 (128, 128, 64, 3, 32, 2)]:
+        boh, boc = plan_blocks(*args, "SAME", vmem_budget=12 * 2**20)
+        assert boh % args[5] == 0 and boc >= 1
+
+
+def test_same_with_ks_lt_s_raises():
+    x, w = rand_problem(4, 4, 4, 2, 4)
+    with pytest.raises(NotImplementedError):
+        mm2im_tconv(x, w, stride=3, padding="SAME", interpret=True)
+
+
+def test_int8_per_channel_requant():
+    """TFLite-style per-channel output scales, fused in the PPU epilogue."""
+    rng = np.random.default_rng(5)
+    xq = rng.integers(-128, 128, (1, 5, 5, 16), dtype=np.int8)
+    wq = rng.integers(-128, 128, (3, 3, 6, 16), dtype=np.int8)
+    bq = rng.integers(-500, 500, (6,), dtype=np.int32)
+    scales = (rng.uniform(1e-4, 5e-3, 6)).astype(np.float32)
+    from repro.kernels.ops import tconv_int8 as t8
+    got = np.asarray(t8(xq, wq, bq, scales, stride=2))
+    acc = np.asarray(ref.iom_reference_int8(xq, wq, bq, stride=2))
+    want = np.clip(np.round(acc.astype(np.float32) * scales), -128, 127
+                   ).astype(np.int8)
+    assert (got == want).all()

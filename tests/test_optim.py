@@ -1,0 +1,62 @@
+"""Optimizer: convergence, clipping, schedules, accumulation equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=None,
+                            warmup_steps=0, schedule="constant")
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = adamw.init(params, cfg)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, opt, _ = adamw.apply(g, opt, params, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_clip_norm_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                            warmup_steps=0, schedule="constant")
+    params = {"x": jnp.zeros(4)}
+    opt = adamw.init(params, cfg)
+    g = {"x": jnp.full(4, 100.0)}
+    _, _, m = adamw.apply(g, opt, params, cfg)
+    assert float(m["grad_norm"]) == 200.0  # pre-clip global norm reported
+
+
+def test_warmup_cosine_schedule():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                            schedule="cosine")
+    s = adamw.make_schedule(cfg)
+    assert float(s(jnp.array(0))) == 0.0
+    assert abs(float(s(jnp.array(10))) - 1.0) < 1e-6
+    assert float(s(jnp.array(110))) < 1e-6
+    assert 0.4 < float(s(jnp.array(60))) < 0.6
+
+
+def test_bf16_state_dtype():
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    opt = adamw.init({"x": jnp.zeros(3)}, cfg)
+    assert opt.m["x"].dtype == jnp.bfloat16
+
+
+def test_grad_accumulation_matches_full_batch():
+    w = jnp.array([1.0, 2.0])
+    xs = jnp.arange(8.0).reshape(8, 1) / 8.0
+    ys = 3.0 * xs[:, 0]
+
+    def lg(params, batch):
+        def loss(p):
+            pred = batch["x"][:, 0] * p[0] + p[1]
+            return jnp.mean((pred - batch["y"]) ** 2)
+        return jax.value_and_grad(loss)(params)
+
+    full_l, full_g = lg(w, {"x": xs, "y": ys})
+    acc = adamw.accumulate(lg, n_micro=4)
+    acc_l, acc_g = acc(w, {"x": xs, "y": ys})
+    np.testing.assert_allclose(float(full_l), float(acc_l), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(full_g), np.asarray(acc_g), rtol=1e-6)

@@ -1,0 +1,60 @@
+"""Perf-model validation (§V-F analogue): model vs XLA cost_analysis."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import perf_model
+from repro.core.maps import TConvProblem, drop_stats
+from repro.kernels import ref
+from repro.kernels.baselines import zero_insertion_macs
+
+PROBLEMS = [TConvProblem(8, 8, 64, 5, 32, 2), TConvProblem(16, 16, 32, 3, 16, 1)]
+
+
+def _xla_flops(fn, *args):
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+@pytest.mark.parametrize("p", PROBLEMS, ids=str)
+def test_unfused_iom_flops_within_10pct(p):
+    x = jnp.zeros((1, p.ih, p.iw, p.ic), jnp.float32)
+    w = jnp.zeros((p.ks, p.ks, p.oc, p.ic), jnp.float32)
+    got = _xla_flops(lambda a, b: ref.iom_reference(a, b, stride=p.stride), x, w)
+    assert abs(got - 2 * p.macs) / (2 * p.macs) < 0.10
+
+
+@pytest.mark.parametrize("p", PROBLEMS, ids=str)
+def test_zero_insertion_flops_within_tolerance(p):
+    """XLA's conv cost model excludes border padding taps; our model uses
+    the dense Oh*Ow*Ks^2 count (the paper's convention).  For small images
+    the border fraction ~ 2*(Ks-1)/Oh — allow for it explicitly."""
+    x = jnp.zeros((1, p.ih, p.iw, p.ic), jnp.float32)
+    w = jnp.zeros((p.ks, p.ks, p.oc, p.ic), jnp.float32)
+    got = _xla_flops(lambda a, b: ref.tconv_direct(a, b, stride=p.stride), x, w)
+    want = 2 * zero_insertion_macs(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride)
+    border = 2.0 * (p.ks - 1) / (p.stride * p.ih)
+    assert abs(got - want) / want < 0.10 + border
+
+
+def test_estimates_ordering_sane():
+    """Fused MM2IM must never be slower than the unfused IOM baseline."""
+    for p in PROBLEMS + [TConvProblem(4, 4, 1024, 5, 512, 2)]:
+        t_m = perf_model.mm2im_estimate(p, bits=8).t_overlapped
+        t_u = perf_model.iom_unfused_estimate(p, bits=8).t_overlapped
+        assert t_m <= t_u * 1.05
+
+
+def test_mxu_utilization_bounds():
+    for p in PROBLEMS:
+        e = perf_model.mm2im_estimate(p, bits=8)
+        assert 0.0 < e.mxu_utilization <= 1.0
+        assert e.effectual_macs == drop_stats(p)["effectual_macs"]
+
+
+def test_modeled_speedup_positive():
+    for p in PROBLEMS:
+        assert perf_model.modeled_speedup(p) > 0.5
