@@ -1,0 +1,88 @@
+"""Tuned-vs-default block plans over a slice of the 261-config sweep.
+
+For each problem in the slice the autotuner enumerates legal
+``(block_oh, block_oc, grid_order)`` tile plans, prunes with the roofline
+model, times the survivors through the real kernel, and persists the
+winner.  We report, per problem:
+
+  * measured us of the tuned plan vs the seed ``plan_blocks`` heuristic;
+  * the winning plan geometry;
+  * a numerical check of the tuned plan against the unfused-IOM oracle
+    (the acceptance gate: tuning must never change results).
+
+A second pass re-opens the cache from a *fresh* ``PlanCache`` (simulating
+a new process) and asserts every tuned key round-trips.
+
+The slice keeps problems small because off-TPU the kernel runs in Pallas
+interpret mode; on a real TPU the same harness times the compiled kernel.
+Set ``REPRO_AUTOTUNE_CACHE`` to control the cache file (defaults to a
+temp file here so benchmark runs do not pollute the user cache).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_models import synthetic_sweep
+from repro.core.autotune import PlanCache, autotune_result, measure_plan
+from repro.core.maps import TConvProblem
+from repro.kernels import ref
+from repro.kernels.ops import tconv
+
+
+def sweep_slice(limit: int = 4) -> list[TConvProblem]:
+    """Small members of the 261-config sweep (interpret-mode friendly)."""
+    small = [p for p in synthetic_sweep()
+             if p.ih <= 7 and p.ic <= 64 and p.oc <= 32 and p.ks <= 5]
+    # Spread across the filtered list so Ks/S/Ic all vary.
+    step = max(len(small) // limit, 1)
+    return small[::step][:limit]
+
+
+def main() -> None:
+    cache_path = os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(tempfile.gettempdir(), "repro_bench_autotune.json"))
+    cache = PlanCache(cache_path)
+
+    rng = np.random.default_rng(0)
+    results = []
+    for p in sweep_slice():
+        # force=True: measure, don't replay — without wiping the cache file
+        # (it may be the user's persistent tuned-plan store).
+        res = autotune_result(p, cache=cache, max_measure=4, repeats=2,
+                              force=True)
+        # Tuned plan must be numerically indistinguishable from the oracle.
+        x = rng.standard_normal((1, p.ih, p.iw, p.ic)).astype(np.float32)
+        w = (rng.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+             ).astype(np.float32)
+        got = np.asarray(tconv(x, w, stride=p.stride, padding=p.padding,
+                               plan=res.plan))
+        want = np.asarray(ref.iom_reference(x, w, stride=p.stride,
+                                            padding=p.padding))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        results.append(res)
+        name = f"autotune_ih{p.ih}_ic{p.ic}_ks{p.ks}_oc{p.oc}_s{p.stride}"
+        pl = res.plan
+        emit(name, res.us,
+             f"default_us={res.default_us:.1f};"
+             f"speedup={res.speedup_vs_default:.2f}x;"
+             f"plan=oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order};"
+             f"cands={res.n_candidates};timed={res.n_measured}")
+
+    # Cross-process round-trip: a brand-new cache object must see every key.
+    fresh = PlanCache(cache_path)
+    missing = [r.key for r in results if fresh.get(r.key) != r.plan]
+    assert not missing, f"cache round-trip lost keys: {missing}"
+    su = np.array([r.speedup_vs_default for r in results])
+    emit("autotune_summary", 0.0,
+         f"n={len(results)};geomean_speedup={np.exp(np.log(su).mean()):.2f}x;"
+         f"cache_entries={len(fresh)};cache={cache_path}")
+
+
+if __name__ == "__main__":
+    main()

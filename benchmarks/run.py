@@ -20,6 +20,7 @@ MODULES = [
     ("gan_e2e", "benchmarks.bench_gan_e2e"),                  # Table IV
     ("perf_model_validation", "benchmarks.bench_perf_model_validation"),  # §V-F
     ("ablations", "benchmarks.bench_ablations"),              # kernel ablations
+    ("autotune", "benchmarks.bench_autotune"),                # tuned vs default plans
     ("scale_roofline", "benchmarks.bench_scale_roofline"),    # §Roofline
 ]
 

@@ -1,0 +1,42 @@
+"""jax version-compat shims (repo targets the image's pinned jax).
+
+The source was written against the post-0.5 public API; the pinned image
+ships 0.4.x.  Two surfaces differ:
+
+* ``jax.set_mesh`` — see ``launch/mesh.py:use_mesh``.
+* ``jax.shard_map`` — on 0.4.x it lives in ``jax.experimental.shard_map``
+  with ``check_rep``/``auto`` instead of ``check_vma``/``axis_names``.
+  :func:`shard_map` translates: ``axis_names`` (manual axes) becomes
+  ``auto = mesh.axis_names - axis_names``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+# Partial-manual shard_map (manual over a subset of mesh axes) only works
+# reliably with the native post-0.5 API; the 0.4.x experimental `auto=`
+# path hits unimplemented PartitionId / IsManualSubgroup paths in XLA's
+# CPU SPMD partitioner.  Tests that need it gate on this flag.
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False):
+    """``jax.shard_map`` when present, else the 0.4.x experimental API."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    manual = frozenset(axis_names) if axis_names is not None else frozenset(
+        mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

@@ -5,12 +5,17 @@ Pallas kernel executes: output-row block (``block_oh = S*bi``), output
 channel block (``block_oc`` — the ``filter_step`` / #PM analogue), the
 input-row slab geometry (``i_end_row`` relation), grid order, and the
 modeled VMEM footprint.  ``kernels/ops.py`` consumes this implicitly via
-``plan_blocks``; benchmarks and tests consume the explicit plan.
+``plan_blocks``; benchmarks, tests and the autotuner
+(``core/autotune.py``) consume the explicit plan: :func:`plan` accepts
+explicit ``block_oh``/``block_oc``/``grid_order`` overrides and
+:func:`candidate_plans` enumerates every legal tile geometry under the
+budget for empirical tuning.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Optional
 
 from repro.core.maps import TConvProblem, rows_slab
 from repro.core.perf_model import HW, V5E, mm2im_estimate
@@ -38,11 +43,8 @@ class TilePlan:
                 f"vmem={self.vmem_bytes/2**20:.2f}MiB halo=+{self.halo_overhead:.0%}")
 
 
-def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E) -> TilePlan:
-    ebytes = bits // 8
-    block_oh, block_oc = plan_blocks(
-        p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
-        vmem_budget=int(hw.vmem_bytes * 0.75), in_bytes=ebytes)
+def _geometry(p: TConvProblem, block_oh: int):
+    """Shared slab/grid geometry for a given output-row block."""
     s = p.stride
     bi = block_oh // s
     ct, _ = crop_offsets(p.ks, s, p.padding)
@@ -50,21 +52,95 @@ def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E) -> Til
     eps = (ct - 1) // s
     n_slab = bi + delta + eps + 1
     n_j = -(-p.oh // block_oh)
-    n_c = -(-p.oc // block_oc)
     ihp = (n_j - 1) * bi + n_slab
     ow_p = -(-p.ow // s) * s
+    return bi, n_slab, n_j, ihp, ow_p
 
-    w_bytes = p.ic * p.ks**2 * n_c * block_oc * ebytes
-    x_bytes = batch * ihp * p.iw * p.ic * ebytes
-    grid_order = "cbj" if w_bytes > x_bytes else "bcj"
 
-    vmem = (ihp * p.iw * p.ic * ebytes                      # resident input
+def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
+               *, bits: int = 8) -> int:
+    """Modeled VMEM footprint of one grid cell (mm2im_pallas residency)."""
+    ebytes = bits // 8
+    _, n_slab, _, ihp, ow_p = _geometry(p, block_oh)
+    return (ihp * p.iw * p.ic * ebytes                      # resident input
             + p.ic * p.ks**2 * block_oc * ebytes            # weight block
             + 2 * n_slab * p.iw * p.ks**2 * block_oc * 4    # mm + acc dbl-buf
             + 2 * block_oh * ow_p * block_oc * 4)
+
+
+def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
+         block_oh: Optional[int] = None, block_oc: Optional[int] = None,
+         grid_order: Optional[str] = None) -> TilePlan:
+    """Tile plan for ``p`` — heuristic by default, explicit when overridden.
+
+    Passing ``block_oh``/``block_oc`` (and optionally ``grid_order``)
+    bypasses the ``plan_blocks`` heuristic; this is how autotuned plans are
+    rendered back into a full :class:`TilePlan` with their modeled VMEM
+    footprint and halo overhead.
+    """
+    ebytes = bits // 8
+    if block_oh is None or block_oc is None:
+        h_oh, h_oc = plan_blocks(
+            p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
+            vmem_budget=int(hw.vmem_bytes * 0.75), in_bytes=ebytes)
+        block_oh = block_oh if block_oh is not None else h_oh
+        block_oc = block_oc if block_oc is not None else h_oc
+    s = p.stride
+    if block_oh % s != 0 or block_oh < s:
+        raise ValueError(f"block_oh={block_oh} must be a positive multiple "
+                         f"of stride {s}")
+    bi, n_slab, n_j, ihp, ow_p = _geometry(p, block_oh)
+    n_c = -(-p.oc // block_oc)
+
+    if grid_order is None or grid_order == "auto":
+        w_bytes = p.ic * p.ks**2 * n_c * block_oc * ebytes
+        x_bytes = batch * ihp * p.iw * p.ic * ebytes
+        grid_order = "cbj" if w_bytes > x_bytes else "bcj"
+
+    vmem = vmem_bytes(p, block_oh, block_oc, bits=bits)
     halo = (n_j * n_slab) / max(p.ih, 1) - 1.0
     return TilePlan(p, block_oh, block_oc, n_slab, n_j, n_c, grid_order,
                     vmem, max(halo, 0.0))
+
+
+# Candidate grids mirror plan_blocks' search space; the autotuner measures
+# instead of guessing, so it also explores both explicit grid orders.
+_CAND_BI = (1, 2, 4, 8, 16, 32, 64)
+_CAND_BOC = (8, 16, 32, 64, 128, 256)
+
+
+def candidate_plans(
+    p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
+    vmem_fraction: float = 0.75,
+) -> List[TilePlan]:
+    """Every legal (block_oh, block_oc, grid_order) under the VMEM budget.
+
+    This is the autotuner's enumeration stage (paper Alg. 1 evaluated
+    per-problem instead of once): all stride-aligned output-row blocks that
+    don't overrun the output, all channel blocks up to O_c, both explicit
+    grid orders.  Deduplicated and budget-filtered; order is deterministic.
+    """
+    budget = int(hw.vmem_bytes * vmem_fraction)
+    s = p.stride
+    seen = set()
+    out: List[TilePlan] = []
+    bocs = sorted({min(p.oc, b) for b in _CAND_BOC})
+    for bi in _CAND_BI:
+        block_oh = s * bi
+        if block_oh > max(p.oh, s):
+            continue  # row block would exceed the whole output
+        for boc in bocs:
+            if vmem_bytes(p, block_oh, boc, bits=bits) > budget:
+                continue
+            for order in ("bcj", "cbj"):
+                key = (block_oh, boc, order)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(plan(p, batch=batch, bits=bits, hw=hw,
+                                block_oh=block_oh, block_oc=boc,
+                                grid_order=order))
+    return out
 
 
 def slab_table(p: TConvProblem, block_oh: int) -> list[tuple[int, int]]:

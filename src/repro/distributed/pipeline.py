@@ -76,7 +76,9 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, *,
                             jnp.zeros_like(outputs))
         return jax.lax.psum(outputs, axis)
 
-    sm = jax.shard_map(
+    from repro.compat import shard_map
+
+    sm = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

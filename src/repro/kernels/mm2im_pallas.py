@@ -59,14 +59,27 @@ def _ceil_div(a: int, b: int) -> int:
 def plan_blocks(
     ih: int, iw: int, ic: int, ks: int, oc: int, stride: int, padding: str,
     *, vmem_budget: int = 12 * 2**20, in_bytes: int = 4,
+    override: Optional[tuple[int, int]] = None,
 ) -> tuple[int, int]:
     """Pick (block_oh, block_oc) within a VMEM budget.
 
     block_oh = S * bi (aligned so the input slab per block is a static-size
     contiguous row range); block_oc tiles the N dimension of the MatMul.
     This is the host-driver role of the paper's 0x01 Configure instruction.
+
+    ``override=(block_oh, block_oc)`` bypasses the heuristic entirely (the
+    autotuner's explicit-plan path); it is validated, not second-guessed.
     """
     s = stride
+    if override is not None:
+        boh, boc = int(override[0]), int(override[1])
+        if boh % s != 0 or boh < s:
+            raise ValueError(
+                f"override block_oh={boh} must be a positive multiple of "
+                f"stride {s}")
+        if boc < 1:
+            raise ValueError(f"override block_oc={boc} must be positive")
+        return boh, boc
     ct, _ = crop_offsets(ks, s, padding)
     oh = out_size(ih, ks, s, padding)
     ow = out_size(iw, ks, s, padding)
@@ -213,7 +226,10 @@ def mm2im_tconv(
                                  in_bytes=x.dtype.itemsize)
         block_oh = block_oh or p_oh
         block_oc = block_oc or p_oc
-    assert block_oh % s == 0, "block_oh must be a multiple of the stride"
+    # Explicit-plan path: plan_blocks validates the override (stride
+    # alignment, positivity) in one place for every caller.
+    block_oh, block_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
+                                     override=(block_oh, block_oc))
     bi = block_oh // s
     boc = block_oc
 

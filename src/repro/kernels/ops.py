@@ -1,7 +1,8 @@
 """Public TCONV op: jit'd, differentiable dispatch over implementations.
 
 ``tconv(x, w, bias, stride=…, method=…)`` is the framework-facing API used
-by ``layers.TConv`` and the GAN models.  Methods:
+by ``layers`` and the GAN models.  Dispatch goes through the pluggable
+kernel registry (``kernels/registry.py``); the built-in methods are:
 
   * ``'mm2im'``         — the paper's technique: fused Pallas kernel
                           (``mm2im_pallas.mm2im_tconv``).  Default.
@@ -10,6 +11,11 @@ by ``layers.TConv`` and the GAN models.  Methods:
   * ``'zero_insertion'``— §II-A method (i) baseline.
   * ``'tdc'``           — §II-A method (ii) baseline.
   * ``'lax'``           — XLA's native conv_transpose (gold).
+
+An explicit tile plan (``registry.Plan`` or a ``(block_oh, block_oc[,
+grid_order])`` tuple — typically produced by ``core/autotune.py``) can be
+passed as ``plan=``; it flows into the Pallas kernel's block geometry.
+Methods that don't tile (everything but ``'mm2im'``) reject explicit plans.
 
 Training support: the Pallas forward is wrapped in ``jax.custom_vjp`` whose
 backward pass is the (automatically derived) VJP of the mathematically
@@ -25,10 +31,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import baselines, ref
+from repro.kernels import baselines, ref, registry
 from repro.kernels.mm2im_pallas import mm2im_tconv
-
-_METHODS = ("mm2im", "iom_unfused", "zero_insertion", "tdc", "lax")
+from repro.kernels.registry import Plan, PlanLike
 
 
 def _fwd_math(x, w, bias, *, stride, padding):
@@ -39,19 +44,23 @@ def _fwd_math(x, w, bias, *, stride, padding):
     return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _mm2im_diff(x, w, bias, stride, padding, activation):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mm2im_diff(x, w, bias, stride, padding, activation, plan):
+    kw = {}
+    if plan is not None:
+        kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
+                  grid_order=plan.grid_order)
     out = mm2im_tconv(x, w, bias, stride=stride, padding=padding,
-                      activation=activation)
+                      activation=activation, **kw)
     return out
 
 
-def _mm2im_fwd(x, w, bias, stride, padding, activation):
-    out = _mm2im_diff(x, w, bias, stride, padding, activation)
+def _mm2im_fwd(x, w, bias, stride, padding, activation, plan):
+    out = _mm2im_diff(x, w, bias, stride, padding, activation, plan)
     return out, (x, w, bias, out)
 
 
-def _mm2im_bwd(stride, padding, activation, res, g):
+def _mm2im_bwd(stride, padding, activation, plan, res, g):
     x, w, bias, out = res
     # Activation backward (epilogue was fused into the kernel).
     if activation == "relu":
@@ -71,7 +80,49 @@ def _mm2im_bwd(stride, padding, activation, res, g):
 _mm2im_diff.defvjp(_mm2im_fwd, _mm2im_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "method", "activation"))
+# ---------------------------------------------------------------------------
+# Built-in method registration.
+# ---------------------------------------------------------------------------
+
+
+@registry.register(
+    "mm2im", fuses_bias=True, fuses_activation=True, supports_plan=True,
+    description="fused Pallas MM2IM kernel (paper technique; default)")
+def _mm2im_impl(x, w, bias, *, stride, padding, activation, plan):
+    return _mm2im_diff(x, w, bias, stride, padding, activation, plan)
+
+
+@registry.register(
+    "iom_unfused",
+    description="paper Eq. (2) unfused: MatMul -> HBM -> col2im scatter")
+def _iom_unfused_impl(x, w, bias, *, stride, padding, activation, plan):
+    return ref.iom_reference(x, w, stride=stride, padding=padding)
+
+
+@registry.register(
+    "zero_insertion", description="§II-A method (i) baseline")
+def _zero_insertion_impl(x, w, bias, *, stride, padding, activation, plan):
+    return baselines.zero_insertion_tconv(x, w, stride=stride, padding=padding)
+
+
+@registry.register("tdc", description="§II-A method (ii) baseline")
+def _tdc_impl(x, w, bias, *, stride, padding, activation, plan):
+    return baselines.tdc_tconv(x, w, stride=stride, padding=padding)
+
+
+@registry.register("lax", description="XLA native conv_transpose (gold)")
+def _lax_impl(x, w, bias, *, stride, padding, activation, plan):
+    return ref.tconv_lax(x, w, stride=stride, padding=padding)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "method", "activation", "plan"))
 def tconv(
     x: jax.Array,
     w: jax.Array,
@@ -81,23 +132,30 @@ def tconv(
     padding: str = "SAME",
     method: str = "mm2im",
     activation: str = "none",
+    plan: PlanLike = None,
 ) -> jax.Array:
     """Transposed convolution.  x: (B,Ih,Iw,Ic); w: (Ks,Ks,Oc,Ic) HWOI."""
-    if method not in _METHODS:
-        raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
-    if method == "mm2im":
-        return _mm2im_diff(x, w, bias, stride, padding, activation)
-    if method == "iom_unfused":
-        out = ref.iom_reference(x, w, stride=stride, padding=padding)
-    elif method == "zero_insertion":
-        out = baselines.zero_insertion_tconv(x, w, stride=stride, padding=padding)
-    elif method == "tdc":
-        out = baselines.tdc_tconv(x, w, stride=stride, padding=padding)
-    else:
-        out = ref.tconv_lax(x, w, stride=stride, padding=padding)
-    if bias is not None:
+    spec = registry.get(method)
+    plan = registry.as_plan(plan)
+    if plan is not None:
+        if not spec.supports_plan:
+            raise ValueError(
+                f"method {method!r} does not accept an explicit tile plan")
+        if plan.block_oh % stride != 0:
+            raise ValueError(
+                f"plan block_oh={plan.block_oh} must be a multiple of "
+                f"stride {stride}")
+    # Epilogue order is bias -> activation, so activation may only be fused
+    # into the kernel when the bias is also applied inside it (fused or
+    # absent); otherwise the kernel would activate before the bias add.
+    fuse_act = spec.fuses_activation and (bias is None or spec.fuses_bias)
+    out = spec.fn(x, w, bias if spec.fuses_bias else None,
+                  stride=stride, padding=padding,
+                  activation=activation if fuse_act else "none",
+                  plan=plan)
+    if bias is not None and not spec.fuses_bias:
         out = out + bias[None, None, None, :]
-    if activation != "none":
+    if activation != "none" and not fuse_act:
         from repro.kernels.mm2im_pallas import _ACTIVATIONS
         out = _ACTIVATIONS[activation](out)
     return out
@@ -111,6 +169,7 @@ def tconv_int8(
     *,
     stride: int,
     padding: str = "SAME",
+    plan: PlanLike = None,
 ) -> jax.Array:
     """8-bit MM2IM TCONV (the paper's precision): int8 in, int8 out.
 
@@ -120,5 +179,10 @@ def tconv_int8(
     if not isinstance(out_scale, float):
         import numpy as _np
         out_scale = _np.asarray(out_scale, _np.float32)
+    plan = registry.as_plan(plan)
+    kw = {}
+    if plan is not None:
+        kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
+                  grid_order=plan.grid_order)
     return mm2im_tconv(x_q, w_q, bias_q, stride=stride, padding=padding,
-                       out_scale=out_scale)
+                       out_scale=out_scale, **kw)

@@ -1,0 +1,139 @@
+"""Pluggable TCONV kernel registry — the dispatch substrate for ``ops.tconv``.
+
+The seed hard-coded a closed ``_METHODS`` tuple inside ``kernels/ops.py``;
+this module replaces it with an open registry so new implementations (a
+future fully-pipelined DMA kernel, a sparse variant, a GPU port) plug in
+without touching the dispatch site, and so the autotuner
+(``core/autotune.py``) can hand any implementation an explicit tile plan.
+
+Two value types live here because every other layer depends on them and
+they must stay import-cycle-free (this module imports only the stdlib):
+
+* :class:`Plan` — an explicit ``(block_oh, block_oc, grid_order)`` tile
+  plan.  Hashable (frozen dataclass) so it can ride through ``jax.jit``
+  static arguments; produced by ``core/autotune.py`` or built by hand.
+* :class:`KernelSpec` — one registered implementation plus its dispatch
+  capabilities (does it fuse bias/activation, does it accept a Plan, is it
+  differentiable).
+
+Registration happens at import time in ``kernels/ops.py`` for the five
+built-in methods; tests and extensions use :func:`register` /
+:func:`unregister` directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Explicit Tiled-MM2IM plan (paper Alg. 1 geometry knobs).
+
+    ``block_oh`` must be a multiple of the stride it is used with;
+    ``grid_order`` is ``'bcj'`` (activation-stationary), ``'cbj'``
+    (weight-stationary, the paper's Alg. 1 order) or ``'auto'``.
+    """
+
+    block_oh: int
+    block_oc: int
+    grid_order: str = "auto"
+
+    def __post_init__(self):
+        if self.block_oh < 1 or self.block_oc < 1:
+            raise ValueError(f"non-positive plan blocks: {self}")
+        if self.grid_order not in ("auto", "bcj", "cbj"):
+            raise ValueError(
+                f"grid_order must be 'auto'|'bcj'|'cbj', got {self.grid_order!r}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        return cls(int(d["block_oh"]), int(d["block_oc"]),
+                   str(d.get("grid_order", "auto")))
+
+
+PlanLike = Union[Plan, Tuple[int, int], Tuple[int, int, str], None]
+
+
+def as_plan(plan: PlanLike) -> Optional[Plan]:
+    """Normalize user input (Plan | (boh, boc) | (boh, boc, order)) -> Plan."""
+    if plan is None or isinstance(plan, Plan):
+        return plan
+    if isinstance(plan, (tuple, list)) and len(plan) in (2, 3):
+        return Plan(int(plan[0]), int(plan[1]),
+                    str(plan[2]) if len(plan) == 3 else "auto")
+    raise ValueError(f"cannot interpret {plan!r} as a tile plan")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered TCONV implementation and its dispatch contract.
+
+    ``fn(x, w, bias, *, stride, padding, activation, plan)`` returns the
+    NHWC output.  Implementations that do not fuse bias/activation receive
+    ``bias=None`` / ``activation='none'`` and the dispatcher applies the
+    epilogue itself; implementations with ``supports_plan=False`` receive
+    ``plan=None`` (passing an explicit plan to them is a dispatch error).
+    """
+
+    name: str
+    fn: Callable
+    fuses_bias: bool = False
+    fuses_activation: bool = False
+    supports_plan: bool = False
+    differentiable: bool = True
+    description: str = ""
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(
+    name: str,
+    *,
+    fuses_bias: bool = False,
+    fuses_activation: bool = False,
+    supports_plan: bool = False,
+    differentiable: bool = True,
+    description: str = "",
+) -> Callable:
+    """Decorator: register ``fn`` as TCONV method ``name``.
+
+    Re-registering an existing name replaces it (latest wins) so tests can
+    shadow a built-in and restore it afterwards.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = KernelSpec(
+            name=name, fn=fn, fuses_bias=fuses_bias,
+            fuses_activation=fuses_activation, supports_plan=supports_plan,
+            differentiable=differentiable, description=description)
+        return fn
+
+    return deco
+
+
+def unregister(name: str) -> Optional[KernelSpec]:
+    """Remove a method; returns the removed spec (None if absent)."""
+    return _REGISTRY.pop(name, None)
+
+
+def get(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"method must be one of {names()}, got {name!r}") from None
+
+
+def names() -> Tuple[str, ...]:
+    """Registered method names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def specs() -> Sequence[KernelSpec]:
+    return tuple(_REGISTRY.values())

@@ -31,6 +31,18 @@ def make_host_mesh(model_parallel: int = 1):
                          ("data", "model"))
 
 
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` across jax versions.
+
+    Newer jax exposes ``jax.set_mesh`` (a context manager); on older
+    releases (e.g. 0.4.x) ``Mesh`` itself is the context manager that sets
+    the physical mesh for bare-``PartitionSpec`` sharding constraints.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def data_axes(mesh) -> tuple:
     """Axes that carry the global batch (pod included when present)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

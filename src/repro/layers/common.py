@@ -127,6 +127,38 @@ def mlp(params, x, kind: str = "swiglu"):
 
 
 # ---------------------------------------------------------------------------
+# Transposed convolution (MM2IM-backed)
+# ---------------------------------------------------------------------------
+
+
+def init_tconv(key, ks: int, oc: int, ic: int, dtype=jnp.float32,
+               scale: float = 0.02):
+    """TCONV layer params: HWOI weights (paper layout) + bias.
+
+    Sharding: output channels over 'model' (column-parallel), input channels
+    over 'data' (FSDP storage), matching the GAN generators.
+    """
+    w = (jax.random.normal(key, (ks, ks, oc, ic), jnp.float32) * scale)
+    params = {"w": w.astype(dtype), "b": jnp.zeros((oc,), dtype)}
+    specs = {"w": P(None, None, "model", "data"), "b": P("model")}
+    return params, specs
+
+
+def tconv_layer(params, x, *, stride: int, padding: str = "SAME",
+                method: str = "mm2im", activation: str = "none", plan=None):
+    """Apply a TCONV layer through the kernel registry.
+
+    ``plan`` is an explicit tile plan (``kernels.registry.Plan`` or a
+    ``(block_oh, block_oc[, grid_order])`` tuple), typically produced by
+    ``core.autotune.autotune`` — this is how tuned plans reach model code.
+    """
+    from repro.kernels.ops import tconv
+
+    return tconv(x, params["w"], params["b"], stride=stride, padding=padding,
+                 method=method, activation=activation, plan=plan)
+
+
+# ---------------------------------------------------------------------------
 # Embedding / unembedding
 # ---------------------------------------------------------------------------
 

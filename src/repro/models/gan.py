@@ -23,6 +23,11 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.ops import tconv
 
 
+def _plan_for(plans, name):
+    """Look up an explicit tile plan for TCONV layer ``name`` (or None)."""
+    return None if plans is None else plans.get(name)
+
+
 def _conv_init(key, ks, cin, cout, scale=0.02):
     return jax.random.normal(key, (ks, ks, cin, cout), jnp.float32) * scale
 
@@ -77,17 +82,37 @@ def init_dcgan_g(key, z_dim: int = 100, base: int = 1024, out_ch: int = 3,
     return params, specs
 
 
-def dcgan_generator(params, z, *, method: str = "mm2im"):
-    """z: (B, z_dim) -> images (B, 64, 64, 3) in [-1, 1]."""
+def dcgan_generator(params, z, *, method: str = "mm2im", plans=None):
+    """z: (B, z_dim) -> images (B, 64, 64, 3) in [-1, 1].
+
+    ``plans`` maps TCONV param names ('t1'..'t4') to explicit tile plans
+    (``kernels.registry.Plan``) — see ``dcgan_tconv_problems`` +
+    ``core.autotune`` for producing them.
+    """
     b = z.shape[0]
     base = params["t1"].shape[3]
     x = (z @ params["proj"]).reshape(b, 4, 4, base)
     x = jax.nn.relu(batchnorm(x))
     for i in (1, 2, 3):
-        x = tconv(x, params[f"t{i}"], params[f"b{i}"], stride=2, method=method)
+        x = tconv(x, params[f"t{i}"], params[f"b{i}"], stride=2, method=method,
+                  plan=_plan_for(plans, f"t{i}"))
         x = jax.nn.relu(batchnorm(x))
-    x = tconv(x, params["t4"], params["b4"], stride=2, method=method)
+    x = tconv(x, params["t4"], params["b4"], stride=2, method=method,
+              plan=_plan_for(plans, "t4"))
     return jnp.tanh(x)
+
+
+def dcgan_tconv_problems(params) -> dict:
+    """The TConvProblem of each generator TCONV layer (autotuner input)."""
+    from repro.core.maps import TConvProblem
+
+    probs = {}
+    ih = 4
+    for i in (1, 2, 3, 4):
+        ks, _, oc, ic = params[f"t{i}"].shape
+        probs[f"t{i}"] = TConvProblem(ih, ih, ic, ks, oc, 2)
+        ih *= 2
+    return probs
 
 
 def init_dcgan_d(key, in_ch: int = 3, base: int = 64, img_size: int = 64):
@@ -139,7 +164,8 @@ def init_pix2pix_g(key, in_ch: int = 3, out_ch: int = 3, base: int = 64,
     return params, specs
 
 
-def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8):
+def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8,
+                      plans=None):
     """U-Net: img (B, 2^depth, 2^depth, C) -> (B, same, same, out_ch)."""
     skips = []
     x = img
@@ -151,7 +177,8 @@ def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8):
         x = jax.nn.leaky_relu(x, 0.2)
     x = jax.nn.relu(skips[-1])
     for i in range(depth):
-        x = tconv(x, params[f"d{i}"], params[f"db{i}"], stride=2, method=method)
+        x = tconv(x, params[f"d{i}"], params[f"db{i}"], stride=2, method=method,
+                  plan=_plan_for(plans, f"d{i}"))
         if i < depth - 1:
             x = batchnorm(x)
             x = jnp.concatenate([jax.nn.relu(x), skips[depth - 2 - i]], -1)
@@ -180,7 +207,8 @@ def init_fsrcnn(key, d: int = 32, s: int = 5, m: int = 2, upscale: int = 3,
     return params, specs
 
 
-def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im"):
+def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im",
+           plans=None):
     x = jax.nn.relu(conv2d(img, params["feat"]))
     x = jax.nn.relu(conv2d(x, params["shrink"]))
     i = 0
@@ -189,7 +217,8 @@ def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im"):
         i += 1
     x = jax.nn.relu(conv2d(x, params["expand"]))
     return tconv(x, params["deconv"], params["db"], stride=upscale,
-                 padding="SAME", method=method)
+                 padding="SAME", method=method,
+                 plan=_plan_for(plans, "deconv"))
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +247,7 @@ def init_styletransfer(key, base: int = 32, n_res: int = 5):
     return params, specs
 
 
-def styletransfer(params, img, *, method: str = "mm2im"):
+def styletransfer(params, img, *, method: str = "mm2im", plans=None):
     x = jax.nn.relu(batchnorm(conv2d(img, params["c1"])))
     x = jax.nn.relu(batchnorm(conv2d(x, params["c2"], 2)))
     x = jax.nn.relu(batchnorm(conv2d(x, params["c3"], 2)))
@@ -228,8 +257,11 @@ def styletransfer(params, img, *, method: str = "mm2im"):
         x = x + batchnorm(conv2d(h, params[f"r{i}b"]))
         i += 1
     x = jax.nn.relu(batchnorm(tconv(x, params["t1"], params["tb1"], stride=2,
-                                    method=method)))
+                                    method=method,
+                                    plan=_plan_for(plans, "t1"))))
     x = jax.nn.relu(batchnorm(tconv(x, params["t2"], params["tb2"], stride=2,
-                                    method=method)))
-    x = tconv(x, params["out"], params["ob"], stride=1, method=method)
+                                    method=method,
+                                    plan=_plan_for(plans, "t2"))))
+    x = tconv(x, params["out"], params["ob"], stride=1, method=method,
+              plan=_plan_for(plans, "out"))
     return jnp.tanh(x)

@@ -1,0 +1,109 @@
+"""Optional-hypothesis shim shared by the property-style kernel tests.
+
+When the real ``hypothesis`` package is installed (the ``test`` extra in
+pyproject.toml), this module re-exports it untouched and the property tests
+run with full randomized shrinking.  When it is absent — the minimal CI /
+edge-device image — the same decorators fall back to a *deterministic*
+sweep: each strategy draws from a seeded ``numpy`` generator (seeded from a
+CRC of the test name, so every run and every machine sees the identical
+example list), ``@settings`` only carries ``max_examples`` through, and the
+test body runs once per drawn example.
+
+Import as ``from _hypothesis_shim import given, settings, st`` — conftest.py
+guarantees the tests directory is importable.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class _Booleans(_Strategy):
+        def sample(self, rng):
+            return bool(rng.integers(2))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo=0.0, hi=1.0, **_kw):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _St:
+        """The subset of ``hypothesis.strategies`` the test-suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kw):
+            return _Floats(min_value, max_value, **kw)
+
+    st = _St()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Fallback ``@settings``: records max_examples, ignores the rest."""
+
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Fallback ``@given``: deterministic example sweep, no shrinking."""
+
+        def deco(fn):
+            def wrapper():
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                n = getattr(wrapper, "_fallback_max_examples",
+                            _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

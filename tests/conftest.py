@@ -2,8 +2,13 @@ import os
 import sys
 
 # Tests run single-device (the dry-run sets its own 512-device flag in a
-# subprocess); make sure src/ is importable regardless of cwd.
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# subprocess); make sure src/ is importable regardless of cwd, and the tests
+# directory itself so the shared `_hypothesis_shim` (optional-hypothesis
+# fallback) resolves under any pytest import mode.
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
 
 import jax  # noqa: E402
 

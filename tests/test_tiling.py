@@ -1,0 +1,134 @@
+"""Property-style invariants for the tiling planner (core/tiling, core/maps).
+
+The slab relations are the correctness backbone of the tiled kernel: if a
+``rows_slab`` range ever misses a contributing input row, the Pallas kernel
+silently drops partial products.  These tests pin the invariants across a
+sweep of strides / paddings / kernel sizes, with a randomized-geometry
+property pass on top (hypothesis when installed, deterministic fallback
+otherwise).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core import tiling
+from repro.core.maps import TConvProblem, max_slab_rows, rows_slab
+from repro.core.perf_model import V5E
+from repro.kernels.ref import crop_offsets
+
+# (ih, iw, ic, ks, oc, s, padding) — SAME requires Ks >= S.
+PROBLEMS = [
+    (2, 2, 2, 3, 2, 1, "SAME"),
+    (4, 4, 3, 5, 2, 2, "SAME"),
+    (7, 7, 32, 3, 16, 1, "SAME"),
+    (9, 9, 16, 5, 8, 2, "SAME"),
+    (5, 6, 4, 4, 3, 2, "SAME"),
+    (4, 4, 8, 7, 5, 2, "SAME"),
+    (6, 6, 4, 2, 3, 2, "SAME"),
+    (3, 3, 4, 3, 2, 1, "VALID"),
+    (4, 5, 4, 5, 3, 2, "VALID"),
+    (5, 5, 4, 3, 2, 3, "VALID"),
+    (8, 8, 16, 9, 3, 1, "SAME"),
+]
+
+
+def _contributing_rows(p: TConvProblem, oh0: int, oh1: int) -> set:
+    """Brute-force input rows feeding output rows [oh0, oh1] via
+    ``oh = S*ih - ct + kh`` (the kernel's mapping relation)."""
+    ct, _ = crop_offsets(p.ks, p.stride, p.padding)
+    rows = set()
+    for ih in range(p.ih):
+        for kh in range(p.ks):
+            oh = p.stride * ih - ct + kh
+            if oh0 <= oh <= oh1 and 0 <= oh < p.oh:
+                rows.add(ih)
+    return rows
+
+
+def _check_slab_invariants(p: TConvProblem, block_oh: int):
+    heights = []
+    for oh0 in range(0, p.oh, block_oh):
+        start, end = rows_slab(p, oh0, block_oh)
+        # Contiguous, in range, non-degenerate.
+        assert 0 <= start <= end <= p.ih, (p, oh0, start, end)
+        oh1 = min(oh0 + block_oh, p.oh) - 1
+        need = _contributing_rows(p, oh0, oh1)
+        if need:
+            # Every contributing input row is inside the slab.
+            assert need <= set(range(start, end)), (p, oh0, need, (start, end))
+        heights.append(end - start)
+    # max_slab_rows bounds every aligned block's slab height.
+    assert max(heights) <= max_slab_rows(p, block_oh), (p, block_oh)
+
+
+@pytest.mark.parametrize("case", PROBLEMS, ids=[str(c) for c in PROBLEMS])
+def test_rows_slab_covers_contributors(case):
+    ih, iw, ic, ks, oc, s, pad = case
+    p = TConvProblem(ih, iw, ic, ks, oc, s, pad)
+    for block_oh in (s, 2 * s, 4 * s):
+        if block_oh > max(p.oh, s):
+            continue
+        _check_slab_invariants(p, block_oh)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ih=st.integers(1, 12), iw=st.integers(1, 10), ks=st.integers(1, 7),
+       s=st.integers(1, 3), padding=st.sampled_from(["SAME", "VALID"]),
+       bi=st.integers(1, 6))
+def test_rows_slab_property_random_geometry(ih, iw, ks, s, padding, bi):
+    if padding == "SAME" and ks < s:
+        return  # unsupported contract (asserted elsewhere)
+    p = TConvProblem(ih, iw, 4, ks, 4, s, padding)
+    block_oh = s * bi
+    if block_oh > max(p.oh, s):
+        return
+    _check_slab_invariants(p, block_oh)
+
+
+@pytest.mark.parametrize("case", PROBLEMS, ids=[str(c) for c in PROBLEMS])
+def test_default_plan_vmem_within_budget(case):
+    ih, iw, ic, ks, oc, s, pad = case
+    p = TConvProblem(ih, iw, ic, ks, oc, s, pad)
+    tp = tiling.plan(p)
+    assert tp.vmem_bytes <= int(V5E.vmem_bytes * 0.75), tp.describe()
+    assert tp.block_oh % s == 0 and tp.block_oc >= 1
+    assert tp.grid_order in ("bcj", "cbj")
+
+
+@pytest.mark.parametrize("case", PROBLEMS, ids=[str(c) for c in PROBLEMS])
+def test_candidate_plans_legal_and_include_default(case):
+    ih, iw, ic, ks, oc, s, pad = case
+    p = TConvProblem(ih, iw, ic, ks, oc, s, pad)
+    budget = int(V5E.vmem_bytes * 0.75)
+    cands = tiling.candidate_plans(p)
+    assert cands, p
+    seen = set()
+    for c in cands:
+        assert c.block_oh % s == 0 and c.block_oh >= s
+        assert 1 <= c.block_oc
+        assert c.grid_order in ("bcj", "cbj")
+        assert c.vmem_bytes <= budget, c.describe()
+        key = (c.block_oh, c.block_oc, c.grid_order)
+        assert key not in seen, f"duplicate candidate {key}"
+        seen.add(key)
+    # The heuristic default geometry is in the enumerated space.
+    tp = tiling.plan(p)
+    assert (tp.block_oh, tp.block_oc, tp.grid_order) in seen
+
+
+def test_explicit_plan_override_roundtrip():
+    p = TConvProblem(8, 8, 16, 5, 12, 2)
+    tp = tiling.plan(p, block_oh=4, block_oc=8, grid_order="cbj")
+    assert (tp.block_oh, tp.block_oc, tp.grid_order) == (4, 8, "cbj")
+    # Partial override keeps the explicit half.
+    tp2 = tiling.plan(p, block_oc=8)
+    assert tp2.block_oc == 8
+
+
+def test_invalid_block_oh_rejected():
+    p = TConvProblem(8, 8, 16, 5, 12, 2)
+    with pytest.raises(ValueError):
+        tiling.plan(p, block_oh=3, block_oc=8)  # not a multiple of stride
+    with pytest.raises(ValueError):
+        tiling.plan(p, block_oh=0, block_oc=8)
