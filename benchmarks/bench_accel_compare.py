@@ -5,8 +5,10 @@ compute resource).  The TPU analogue of "per DSP" is *per MXU cycle*:
 effectual-FLOP fraction of issued MXU work (how much of the dense compute
 the method wastes), plus modeled end-to-end latency per method on v5e.
 
-Methods: fused MM2IM (ours), unfused IOM (matmul+scatter), Zero-Insertion,
-TDC — all four implemented and numerically validated in this repo.
+Methods: fused MM2IM (ours, single- and double-buffered — the latter's
+row includes the overlapped-copy term, so the delta between the two is the
+modeled data-in stall), unfused IOM (matmul+scatter), Zero-Insertion,
+TDC — all implemented and numerically validated in this repo.
 """
 
 from __future__ import annotations

@@ -1,17 +1,25 @@
 """Tuned-vs-default block plans over a slice of the 261-config sweep.
 
 For each problem in the slice the autotuner enumerates legal
-``(block_oh, block_oc, grid_order)`` tile plans, prunes with the roofline
-model, times the survivors through the real kernel, and persists the
+``(method, block_oh, block_oc, grid_order)`` tile plans — ``method``
+choosing between the single-buffered MM2IM kernel and the double-buffered
+DMA pipeline — prunes with the roofline model (overlapped-copy term
+included), times the survivors through the real kernels, and persists the
 winner.  We report, per problem:
 
   * measured us of the tuned plan vs the seed ``plan_blocks`` heuristic;
-  * the winning plan geometry;
+  * the winning plan geometry *and kernel variant*;
+  * a single- vs double-buffered head-to-head at the default geometry
+    (measured ratio next to the perf model's predicted ratio, so predicted
+    and measured rankings can be compared);
   * a numerical check of the tuned plan against the unfused-IOM oracle
     (the acceptance gate: tuning must never change results).
 
 A second pass re-opens the cache from a *fresh* ``PlanCache`` (simulating
-a new process) and asserts every tuned key round-trips.
+a new process) and asserts every tuned key round-trips.  A third pass
+exercises the int8 and batch>1 key space (``autotune_sweep``) — the
+paper's precision and the serving batch dimension — so the GAN
+training/serve paths hit tuned plans out of the box.
 
 The slice keeps problems small because off-TPU the kernel runs in Pallas
 interpret mode; on a real TPU the same harness times the compiled kernel.
@@ -24,14 +32,18 @@ from __future__ import annotations
 import os
 import tempfile
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.paper_models import synthetic_sweep
-from repro.core.autotune import PlanCache, autotune_result, measure_plan
+from repro.core.autotune import (PlanCache, autotune_result, autotune_sweep,
+                                 measure_plan)
 from repro.core.maps import TConvProblem
+from repro.core.perf_model import mm2im_db_estimate, mm2im_estimate
 from repro.kernels import ref
 from repro.kernels.ops import tconv
+from repro.kernels.registry import Plan
 
 
 def sweep_slice(limit: int = 4) -> list[TConvProblem]:
@@ -41,6 +53,25 @@ def sweep_slice(limit: int = 4) -> list[TConvProblem]:
     # Spread across the filtered list so Ks/S/Ic all vary.
     step = max(len(small) // limit, 1)
     return small[::step][:limit]
+
+
+def _db_head_to_head(p: TConvProblem, res) -> str:
+    """Single- vs double-buffered at the default geometry: measured ratio
+    next to the roofline prediction (ranking-agreement check)."""
+    d = res.default_plan
+    geom = dict(block_oh=d.block_oh, block_oc=d.block_oc,
+                grid_order=d.grid_order)
+    sb_us = measure_plan(p, Plan(d.block_oh, d.block_oc, d.grid_order,
+                                 "mm2im"), repeats=2)
+    db_us = measure_plan(p, Plan(d.block_oh, d.block_oc, d.grid_order,
+                                 "mm2im_db"), repeats=2)
+    pred_sb = mm2im_estimate(p, 1, bits=32, **geom).t_overlapped
+    pred_db = mm2im_db_estimate(p, 1, bits=32, **geom).t_overlapped
+    agree = (sb_us <= db_us) == (pred_sb <= pred_db)
+    return (f"sb_us={sb_us:.1f};db_us={db_us:.1f};"
+            f"db_vs_sb={sb_us / max(db_us, 1e-9):.2f}x;"
+            f"pred_db_vs_sb={pred_sb / max(pred_db, 1e-12):.2f}x;"
+            f"rank_agree={int(agree)}")
 
 
 def main() -> None:
@@ -71,17 +102,34 @@ def main() -> None:
         emit(name, res.us,
              f"default_us={res.default_us:.1f};"
              f"speedup={res.speedup_vs_default:.2f}x;"
-             f"plan=oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order};"
+             f"plan=oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order}"
+             f"/{pl.method or 'mm2im'};"
              f"cands={res.n_candidates};timed={res.n_measured}")
+        emit(name + "_dbcmp", 0.0, _db_head_to_head(p, res))
 
     # Cross-process round-trip: a brand-new cache object must see every key.
     fresh = PlanCache(cache_path)
     missing = [r.key for r in results if fresh.get(r.key) != r.plan]
     assert not missing, f"cache round-trip lost keys: {missing}"
     su = np.array([r.speedup_vs_default for r in results])
+    n_db = sum(1 for r in results if r.plan.method == "mm2im_db")
     emit("autotune_summary", 0.0,
          f"n={len(results)};geomean_speedup={np.exp(np.log(su).mean()):.2f}x;"
-         f"cache_entries={len(fresh)};cache={cache_path}")
+         f"db_winners={n_db};cache_entries={len(fresh)};cache={cache_path}")
+
+    # int8 (the paper's precision) + batch>1 key coverage: the instances
+    # the GAN int8 serve path and batched training hit.  Replays from the
+    # cache when already tuned (force is deliberately off here).
+    q = sweep_slice(limit=2)
+    sw = autotune_sweep(q, dtypes=(jnp.int8,), batches=(1,), cache=cache,
+                        max_measure=2, repeats=1)
+    sw += autotune_sweep(q[:1], dtypes=(jnp.float32,), batches=(2,),
+                         cache=cache, max_measure=2, repeats=1)
+    for i, r in enumerate(sw):
+        emit(f"autotune_sweep_{i}", r.us,
+             f"key={r.key};plan=oh{r.plan.block_oh}/oc{r.plan.block_oc}"
+             f"/{r.plan.grid_order}/{r.plan.method or 'mm2im'};"
+             f"from_cache={int(r.from_cache)}")
 
 
 if __name__ == "__main__":

@@ -48,10 +48,16 @@ def measured_cpu() -> None:
     p, _ = gan.init_dcgan_g(key, scale_down=8)
     z = jax.random.normal(jax.random.PRNGKey(1), (2, 100))
     outs = {}
-    for m in ("mm2im", "iom_unfused", "zero_insertion", "tdc", "lax"):
+    for m in ("mm2im", "mm2im_db", "iom_unfused", "zero_insertion", "tdc",
+              "lax"):
         fn = jax.jit(lambda zz, m=m: gan.dcgan_generator(p, zz, method=m))
         outs[m] = np.asarray(fn(z))
-        if m != "mm2im":
+        if m == "mm2im_db":
+            # Pipelined variant: interpret-mode wall time is meaningless,
+            # but the e2e output must be bit-identical to 'mm2im'.
+            emit("tableIV_dcgan_cpu_mm2im_db", 0.0,
+                 f"bitident_vs_mm2im={int((outs[m] == outs['mm2im']).all())}")
+        elif m != "mm2im":
             us = time_fn(fn, z, repeats=3)
             emit(f"tableIV_dcgan_cpu_{m}", us,
                  f"max_dev_vs_mm2im={np.abs(outs[m]-outs['mm2im']).max():.2e}")

@@ -8,6 +8,11 @@ MM2IM kernel *forward and backward* (custom_vjp).  At --scale-down 1 and
 --image-size 64 this is the paper's DCGAN at full width (train on real
 hardware); the CPU default trains a few hundred steps of the reduced
 model in minutes, checkpointing along the way.
+
+The step comes from ``runtime.steps.make_gan_train_step``, which resolves
+tuned tile plans from the autotuner cache automatically — run
+``python -m benchmarks.run --only autotune`` (or ``autotune_sweep``) once
+and this trainer picks the tuned plans/kernel variant up on its own.
 """
 
 from __future__ import annotations
@@ -16,12 +21,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models import gan
 from repro.optim import adamw
+from repro.runtime import steps as runtime_steps
 
 
 def main() -> None:
@@ -30,7 +35,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--scale-down", type=int, default=16)
     ap.add_argument("--method", default="mm2im",
-                    choices=["mm2im", "iom_unfused", "zero_insertion", "tdc", "lax"])
+                    choices=["mm2im", "mm2im_db", "iom_unfused",
+                             "zero_insertion", "tdc", "lax"])
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_dcgan")
     ap.add_argument("--log-every", type=int, default=20)
@@ -44,32 +50,16 @@ def main() -> None:
                                 weight_decay=0.0, clip_norm=None,
                                 warmup_steps=0, total_steps=args.steps,
                                 schedule="constant")
+    bundle = runtime_steps.make_gan_train_step(
+        g_params, d_params, opt_cfg, batch=args.batch, method=args.method)
+    train_step = bundle.fn
+    tuned = bundle.meta["plans"]  # what the step actually closed over
+    if tuned:
+        print(f"[dcgan] tuned plans from autotuner cache: "
+              f"{ {k: (p.block_oh, p.block_oc, p.method) for k, p in tuned.items()} }")
+
     g_opt = adamw.init(g_params, opt_cfg)
     d_opt = adamw.init(d_params, opt_cfg)
-
-    def bce(logits, is_real: bool):
-        sign = 1.0 if is_real else -1.0
-        return jnp.mean(jax.nn.softplus(-sign * logits))
-
-    @jax.jit
-    def train_step(state, z, real):
-        g_params, g_opt, d_params, d_opt = state
-
-        def d_loss(dp):
-            fake = gan.dcgan_generator(g_params, z, method=args.method)
-            return bce(gan.dcgan_discriminator(dp, real), True) + \
-                bce(gan.dcgan_discriminator(dp, fake), False)
-
-        dl, dg = jax.value_and_grad(d_loss)(d_params)
-        d_params, d_opt, _ = adamw.apply(dg, d_opt, d_params, opt_cfg)
-
-        def g_loss(gp):
-            fake = gan.dcgan_generator(gp, z, method=args.method)
-            return bce(gan.dcgan_discriminator(d_params, fake), True)
-
-        gl, gg = jax.value_and_grad(g_loss)(g_params)
-        g_params, g_opt, _ = adamw.apply(gg, g_opt, g_params, opt_cfg)
-        return (g_params, g_opt, d_params, d_opt), (dl, gl)
 
     data_cfg = DataConfig(vocab=0, seq_len=0, global_batch=args.batch,
                           kind="image", image_size=64)
@@ -89,8 +79,9 @@ def main() -> None:
         if (step + 1) % max(args.steps // 2, 1) == 0:
             ckpt.save(step + 1, state, block=True)
 
-    imgs = gan.dcgan_generator(state[0], make_batch(z_cfg, 999)["z"][:4],
-                               method=args.method)
+    sample = runtime_steps.make_gan_sample_step(
+        state[0], batch=4, method=args.method).fn
+    imgs = sample(state[0], make_batch(z_cfg, 999)["z"][:4])
     print(f"[dcgan] done: generated {imgs.shape}, "
           f"range [{float(imgs.min()):.2f}, {float(imgs.max()):.2f}], "
           f"method={args.method}")

@@ -1,25 +1,40 @@
-"""Empirical block-size autotuner for the fused MM2IM Pallas kernel.
+"""Empirical block-size + kernel-variant autotuner for the MM2IM kernels.
 
 The paper picks its tile geometry per TCONV configuration with Alg. 1 and
 validates the choice over 261 problem configs; the seed port instead ran
 one ``plan_blocks`` heuristic everywhere.  This module closes that gap
 with a measure-don't-guess loop:
 
-  1. **enumerate** — every legal ``(block_oh, block_oc, grid_order)`` under
-     the VMEM budget (``core/tiling.candidate_plans``);
+  1. **enumerate** — every legal ``(method, block_oh, block_oc,
+     grid_order)`` under the VMEM budget
+     (``core/tiling.candidate_plans``) — ``method`` picks between the
+     single-buffered kernel and the double-buffered DMA pipeline
+     (``kernels/mm2im_db_pallas``), which are bit-identical, so the choice
+     is purely empirical;
   2. **prune** — rank candidates by the analytical roofline
-     (``core/perf_model.mm2im_estimate``) and keep the top few, always
+     (``core/perf_model.mm2im_estimate`` / ``mm2im_db_estimate``,
+     including the overlapped-copy term) and keep the top few, always
      including the heuristic default;
-  3. **measure** — wall-time the survivors through the real kernel
-     (``mm2im_pallas.mm2im_tconv`` — the Pallas TPU kernel on TPU,
-     interpret mode elsewhere);
+  3. **measure** — wall-time the survivors through the real kernels
+     (:data:`KERNEL_RUNNERS` — Pallas TPU kernels on TPU, interpret mode
+     elsewhere);
   4. **persist** — store the winner in an on-disk JSON cache keyed by
      ``(TConvProblem, dtype, hw, batch)`` so later processes skip straight
      to the tuned plan.
 
 The returned :class:`~repro.kernels.registry.Plan` is accepted verbatim by
 ``ops.tconv(..., plan=...)``, ``layers.common.tconv_layer`` and the GAN
-models' ``plans=`` mapping.
+models' ``plans=`` mapping — and, because ``ops.tconv`` consults this
+cache automatically at trace time (:func:`cached_plan`), a tuned problem
+needs **no** explicit ``plans=`` threading at all: tune once, every later
+process with the same cache hits the tuned plan.  See docs/AUTOTUNER.md
+for the file format, the key schema and the consumption precedence.
+
+Tuning a third-party registry variant: register the kernel
+(``kernels/registry.register`` — see that module's docstring), add its
+runner to :data:`KERNEL_RUNNERS` and, if ``core/tiling.candidate_plans``
+should enumerate it, pass it in that function's ``methods=``.  Tuned plans
+then carry ``Plan.method`` naming the variant and dispatch back to it.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune_cache.json``.
@@ -32,7 +47,7 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Optional, Sequence, Union
+from typing import Dict, Iterable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +55,29 @@ import numpy as np
 
 from repro.core import tiling
 from repro.core.maps import TConvProblem
-from repro.core.perf_model import HW, V5E, mm2im_estimate
+from repro.core.perf_model import HW, V5E, mm2im_db_estimate, mm2im_estimate
+from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
 from repro.kernels.mm2im_pallas import mm2im_tconv
 from repro.kernels.registry import Plan
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = "~/.cache/repro/autotune_cache.json"
 _CACHE_VERSION = 1
+
+# method name -> direct kernel entry point with the mm2im_tconv signature.
+# The autotuner times these (registry dispatch adds jit/epilogue layers the
+# measurement should not include); extend for third-party plan-capable
+# variants.
+KERNEL_RUNNERS: Dict[str, object] = {
+    "mm2im": mm2im_tconv,
+    "mm2im_db": mm2im_db_tconv,
+}
+
+# method name -> roofline estimator used by the pruning stage.
+_METHOD_ESTIMATORS = {
+    "mm2im": mm2im_estimate,
+    "mm2im_db": mm2im_db_estimate,
+}
 
 
 def default_cache_path() -> Path:
@@ -73,11 +104,24 @@ class PlanCache:
     def __init__(self, path: Union[str, Path, None] = None):
         self.path = Path(path).expanduser() if path else default_cache_path()
         self._entries: Optional[dict] = None
+        self._loaded_mtime: Optional[float] = None
 
     # -- storage ------------------------------------------------------------
 
+    def _mtime(self) -> Optional[float]:
+        try:
+            return self.path.stat().st_mtime_ns
+        except OSError:
+            return None
+
     def _load(self) -> dict:
-        if self._entries is None:
+        # Re-read when the file changed on disk (another PlanCache instance
+        # or another process tuned since) — one stat() per lookup, so the
+        # long-lived shared_cache() instance behind automatic consumption
+        # sees same-process tune-then-train writes too.
+        mtime = self._mtime()
+        if self._entries is None or mtime != self._loaded_mtime:
+            self._loaded_mtime = mtime
             try:
                 raw = json.loads(self.path.read_text())
                 if raw.get("version") == _CACHE_VERSION:
@@ -152,10 +196,15 @@ def _rand_inputs(p: TConvProblem, batch: int, dtype):
 def measure_plan(p: TConvProblem, plan: Plan, *, batch: int = 1,
                  dtype=jnp.float32, repeats: int = 3,
                  warmup: int = 1) -> float:
-    """Median wall-time (us) of the kernel under an explicit plan."""
-    x, w = _rand_inputs(p, batch, dtype)
+    """Median wall-time (us) of the plan's kernel variant under the plan.
 
-    fn = jax.jit(lambda xx, ww: mm2im_tconv(
+    ``plan.method`` selects the entry point from :data:`KERNEL_RUNNERS`
+    (``None`` means the single-buffered default).
+    """
+    x, w = _rand_inputs(p, batch, dtype)
+    kernel = KERNEL_RUNNERS[plan.method or "mm2im"]
+
+    fn = jax.jit(lambda xx, ww: kernel(
         xx, ww, stride=p.stride, padding=p.padding,
         block_oh=plan.block_oh, block_oc=plan.block_oc,
         grid_order=plan.grid_order))
@@ -177,7 +226,7 @@ def default_plan(p: TConvProblem, *, batch: int = 1, dtype=jnp.float32,
                  hw: HW = V5E) -> Plan:
     """The seed heuristic's choice, as an explicit Plan."""
     tp = tiling.plan(p, batch=batch, bits=_bits(dtype), hw=hw)
-    return Plan(tp.block_oh, tp.block_oc, tp.grid_order)
+    return Plan(tp.block_oh, tp.block_oc, tp.grid_order, tp.method)
 
 
 def autotune_result(
@@ -213,16 +262,19 @@ def autotune_result(
 
     bits = _bits(dtype)
     cands = tiling.candidate_plans(p, batch=batch, bits=bits, hw=hw)
-    plans = [Plan(c.block_oh, c.block_oc, c.grid_order) for c in cands]
+    plans = [Plan(c.block_oh, c.block_oc, c.grid_order, c.method)
+             for c in cands]
     if dflt not in plans:
         plans.append(dflt)
 
-    # Prune by the analytical roofline; keep the default in the field so the
-    # measurement is always at least a default-vs-challenger comparison.
+    # Prune by the analytical roofline (overlapped-copy term included, so
+    # single- and double-buffered candidates rank against each other); keep
+    # the default in the field so the measurement is always at least a
+    # default-vs-challenger comparison.
     def score(pl: Plan) -> float:
-        return mm2im_estimate(p, batch, block_oh=pl.block_oh,
-                              block_oc=pl.block_oc, bits=bits,
-                              grid_order=pl.grid_order, hw=hw).t_overlapped
+        est = _METHOD_ESTIMATORS[pl.method or "mm2im"]
+        return est(p, batch, block_oh=pl.block_oh, block_oc=pl.block_oc,
+                   bits=bits, grid_order=pl.grid_order, hw=hw).t_overlapped
 
     ranked = sorted(plans, key=score)
     survivors = ranked[:max(max_measure - 1, 1)]
@@ -247,3 +299,76 @@ def autotune_result(
 def autotune(p: TConvProblem, **kw) -> Plan:
     """Tuned :class:`Plan` for ``p`` (cache-backed). See autotune_result."""
     return autotune_result(p, **kw).plan
+
+
+# ---------------------------------------------------------------------------
+# Automatic consumption — the read-only fast path used by ops.tconv.
+# ---------------------------------------------------------------------------
+
+_SHARED_CACHES: dict = {}  # resolved path -> PlanCache (per-process memo)
+
+
+def shared_cache(path: Union[str, Path, None] = None) -> PlanCache:
+    """Process-wide :class:`PlanCache` for ``path`` (default location).
+
+    ``ops.tconv`` consults the cache once per jit trace; sharing one
+    instance per path means the JSON file is parsed once per process, not
+    once per trace.
+    """
+    resolved = str(Path(path).expanduser() if path else default_cache_path())
+    c = _SHARED_CACHES.get(resolved)
+    if c is None:
+        c = _SHARED_CACHES[resolved] = PlanCache(resolved)
+    return c
+
+
+def reset_shared_caches() -> None:
+    """Drop the per-process cache memo (tests; after external cache edits)."""
+    _SHARED_CACHES.clear()
+
+
+def cached_plan(p: TConvProblem, *, dtype=jnp.float32, batch: int = 1,
+                hw: HW = V5E,
+                cache: Union[PlanCache, str, Path, None] = None
+                ) -> Optional[Plan]:
+    """Tuned plan for ``p`` if the on-disk cache has one; never measures.
+
+    This is the lookup behind automatic plan consumption
+    (``ops.tconv`` with no ``plan=``): a pure read — a miss returns None
+    and the caller falls back to the ``plan_blocks`` heuristic.
+    """
+    if not isinstance(cache, PlanCache):
+        cache = shared_cache(cache)
+    return cache.get(cache_key(p, dtype=dtype, hw=hw, batch=batch))
+
+
+def autotune_sweep(
+    problems: Iterable[TConvProblem],
+    *,
+    dtypes: Sequence = (jnp.float32, jnp.int8),
+    batches: Sequence[int] = (1,),
+    hw: HW = V5E,
+    cache: Union[PlanCache, str, Path, None] = None,
+    **kw,
+) -> list:
+    """Tune the cross product problems x dtypes x batches; return results.
+
+    This is how the cache gets its int8 (the paper's precision) and
+    batch>1 coverage so the GAN training/serve paths hit tuned plans out
+    of the box — e.g.::
+
+        autotune_sweep(gan.dcgan_tconv_problems(params).values(),
+                       dtypes=(jnp.float32, jnp.int8), batches=(1, 8))
+
+    Extra kwargs flow to :func:`autotune_result` (``max_measure``,
+    ``repeats``, ``force``, ...).
+    """
+    if not isinstance(cache, PlanCache):
+        cache = PlanCache(cache) if cache is not None else shared_cache()
+    results = []
+    for p in problems:
+        for dtype in dtypes:
+            for batch in batches:
+                results.append(autotune_result(
+                    p, batch=batch, dtype=dtype, hw=hw, cache=cache, **kw))
+    return results

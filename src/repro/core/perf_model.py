@@ -14,8 +14,18 @@ The model knows the *exact* dataflow of every implementation method, so it
 can predict method-vs-method speedups (the role Fig. 6 / Table II play in
 the paper) without hardware.  §V-F's validation becomes: model FLOPs/bytes
 vs the XLA-compiled ``cost_analysis()`` (tests assert agreement), and the
-hillclimbing loop in EXPERIMENTS.md §Perf iterates on whichever term this
-model says dominates.
+hillclimbing loop in docs/EXPERIMENTS.md §Perf iterates on whichever term
+this model says dominates.
+
+The MM2IM family additionally models the **overlapped-copy term**
+(``Estimate.t_fill``): the part of data movement that compute cannot hide.
+For the single-buffered kernel that is the serial whole-input VMEM landing
+(the SECDA data-in stall the paper pipelines away); for the double-buffered
+variant (``'mm2im_db'``) it shrinks to one slab copy — the pipeline fill —
+at the price of halo re-reads in ``t_memory``.  This is what lets
+``core/autotune.py`` rank single- vs double-buffered candidates before
+measuring, and ``benchmarks/bench_autotune.py`` compare predicted vs
+measured rankings.
 
 Hardware constants are TPU v5e per the assignment: 197 TFLOP/s bf16
 (we model int8 at 2x), 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -46,19 +56,28 @@ V5E = HW()
 
 @dataclasses.dataclass
 class Estimate:
-    """Roofline terms (seconds) + bookkeeping for one op/method."""
+    """Roofline terms (seconds) + bookkeeping for one op/method.
+
+    ``t_fill`` is the non-overlappable slice OF ``t_memory`` (pipeline
+    fill): bytes that must land before the first MAC can issue.  It is not
+    extra traffic — ``t_memory`` already contains it — so the overlapped
+    bound overlaps compute only with the *rest* of the memory time:
+    ``max(compute, memory - fill, collective) + fill``.
+    """
 
     method: str
     t_compute: float
     t_memory: float
     t_collective: float = 0.0
+    t_fill: float = 0.0
     issued_macs: int = 0
     effectual_macs: int = 0
     hbm_bytes: int = 0
 
     @property
     def t_overlapped(self) -> float:
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        return (max(self.t_compute, self.t_memory - self.t_fill,
+                    self.t_collective) + self.t_fill)
 
     @property
     def t_serial(self) -> float:
@@ -89,8 +108,16 @@ def mm2im_estimate(
     bits: int = 8,
     grid_order: str = "auto",
     hw: HW = V5E,
+    double_buffered: bool = False,
 ) -> Estimate:
-    """Model the fused Pallas MM2IM kernel's dataflow exactly."""
+    """Model the fused Pallas MM2IM kernel's dataflow exactly.
+
+    ``double_buffered=False`` models ``kernels/mm2im_pallas`` (whole input
+    resident in VMEM; fill = the serial whole-input landing).
+    ``double_buffered=True`` models ``kernels/mm2im_db_pallas`` (two-slot
+    slab pipeline: fill shrinks to one slab copy, but every row block
+    re-reads its halo rows from HBM).
+    """
     from repro.kernels.mm2im_pallas import plan_blocks  # avoid cycle
 
     if block_oh is None or block_oc is None:
@@ -101,7 +128,6 @@ def mm2im_estimate(
     bi = block_oh // s
     n_j = -(-p.oh // block_oh)
     n_c = -(-p.oc // block_oc)
-    n_slab = max_slab_rows(p, block_oh) if False else None  # static formula below
     # Static slab height (mm2im_pallas geometry).
     from repro.kernels.ref import crop_offsets
 
@@ -120,23 +146,46 @@ def mm2im_estimate(
 
     # HBM traffic under the chosen grid order (resident-block model).
     w_bytes = p.ic * p.ks**2 * oc_p * ebytes
-    x_bytes_once = ihp * p.iw * p.ic * ebytes
+    slab_bytes = n_slab * p.iw * p.ic * ebytes
+    if double_buffered:
+        # Slab-granular reads: each row block re-fetches its halo rows.
+        x_bytes_once = n_j * slab_bytes
+    else:
+        x_bytes_once = ihp * p.iw * p.ic * ebytes
     out_bytes = batch * n_j * block_oh * (-(-p.ow // s) * s) * oc_p * (1 if bits == 8 else 4)
     if grid_order == "auto":
         grid_order = "cbj" if w_bytes > batch * x_bytes_once else "bcj"
-    if grid_order == "cbj":
+    if double_buffered:
+        # The pipeline never keeps x resident: every (batch, oc-block) grid
+        # cell re-DMAs all its slabs from HBM under BOTH grid orders, so
+        # the x term always carries the n_c multiplicity; grid order only
+        # decides whether the weight blocks are re-fetched per batch.
+        hbm = ((w_bytes if grid_order == "cbj" else batch * w_bytes)
+               + n_c * batch * x_bytes_once + out_bytes)
+    elif grid_order == "cbj":
         hbm = w_bytes + n_c * batch * x_bytes_once + out_bytes
     else:
         hbm = batch * (x_bytes_once + w_bytes) + out_bytes
 
+    # Overlapped-copy term: what the compute pipeline cannot hide.  The
+    # single-buffered kernel stalls until the whole padded input landed in
+    # VMEM; the double-buffered pipeline stalls only for its first slab.
+    fill_bytes = slab_bytes if double_buffered else ihp * p.iw * p.ic * ebytes
+
     return Estimate(
-        method="mm2im",
+        method="mm2im_db" if double_buffered else "mm2im",
         t_compute=2 * issued / _dtype_peak(hw, bits),
         t_memory=hbm / hw.hbm_bw,
+        t_fill=fill_bytes / hw.hbm_bw,
         issued_macs=issued,
         effectual_macs=eff,
         hbm_bytes=hbm,
     )
+
+
+def mm2im_db_estimate(p: TConvProblem, batch: int = 1, **kw) -> Estimate:
+    """Double-buffered MM2IM pipeline (``kernels/mm2im_db_pallas``)."""
+    return mm2im_estimate(p, batch, double_buffered=True, **kw)
 
 
 def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
@@ -197,6 +246,7 @@ def tdc_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
 
 ESTIMATORS = {
     "mm2im": mm2im_estimate,
+    "mm2im_db": mm2im_db_estimate,
     "iom_unfused": iom_unfused_estimate,
     "zero_insertion": zero_insertion_estimate,
     "tdc": tdc_estimate,

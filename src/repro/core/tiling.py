@@ -34,10 +34,12 @@ class TilePlan:
     grid_order: str
     vmem_bytes: int
     halo_overhead: float  # recomputed-slab fraction vs ideal (dense-MXU cost)
+    method: str = "mm2im"  # kernel variant: 'mm2im' | 'mm2im_db'
 
     def describe(self) -> str:
         p = self.problem
         return (f"tconv({p.ih},{p.iw},{p.ic},{p.ks},{p.oc},{p.stride}) "
+                f"[{self.method}] "
                 f"block_oh={self.block_oh} block_oc={self.block_oc} "
                 f"slab={self.n_slab} grid={self.grid_order} "
                 f"vmem={self.vmem_bytes/2**20:.2f}MiB halo=+{self.halo_overhead:.0%}")
@@ -58,25 +60,37 @@ def _geometry(p: TConvProblem, block_oh: int):
 
 
 def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
-               *, bits: int = 8) -> int:
-    """Modeled VMEM footprint of one grid cell (mm2im_pallas residency)."""
+               *, bits: int = 8, method: str = "mm2im") -> int:
+    """Modeled VMEM footprint of one grid cell.
+
+    ``'mm2im'`` keeps the whole padded input resident
+    (``mm2im_pallas`` residency); ``'mm2im_db'`` holds only the two-slot
+    slab + output scratch of the DMA pipeline (``mm2im_db_pallas``), which
+    is what lets the double-buffered variant run blocks the single-buffered
+    kernel cannot fit.
+    """
     ebytes = bits // 8
     _, n_slab, _, ihp, ow_p = _geometry(p, block_oh)
-    return (ihp * p.iw * p.ic * ebytes                      # resident input
+    if method == "mm2im_db":
+        x_resident = 2 * n_slab * p.iw * p.ic * ebytes      # two slab slots
+    else:
+        x_resident = ihp * p.iw * p.ic * ebytes             # whole input
+    return (x_resident
             + p.ic * p.ks**2 * block_oc * ebytes            # weight block
             + 2 * n_slab * p.iw * p.ks**2 * block_oc * 4    # mm + acc dbl-buf
-            + 2 * block_oh * ow_p * block_oc * 4)
+            + 2 * block_oh * ow_p * block_oc * 4)           # out blocks/slots
 
 
 def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
          block_oh: Optional[int] = None, block_oc: Optional[int] = None,
-         grid_order: Optional[str] = None) -> TilePlan:
+         grid_order: Optional[str] = None,
+         method: str = "mm2im") -> TilePlan:
     """Tile plan for ``p`` — heuristic by default, explicit when overridden.
 
-    Passing ``block_oh``/``block_oc`` (and optionally ``grid_order``)
-    bypasses the ``plan_blocks`` heuristic; this is how autotuned plans are
-    rendered back into a full :class:`TilePlan` with their modeled VMEM
-    footprint and halo overhead.
+    Passing ``block_oh``/``block_oc`` (and optionally ``grid_order`` /
+    ``method``) bypasses the ``plan_blocks`` heuristic; this is how
+    autotuned plans are rendered back into a full :class:`TilePlan` with
+    their modeled VMEM footprint and halo overhead.
     """
     ebytes = bits // 8
     if block_oh is None or block_oc is None:
@@ -97,28 +111,35 @@ def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
         x_bytes = batch * ihp * p.iw * p.ic * ebytes
         grid_order = "cbj" if w_bytes > x_bytes else "bcj"
 
-    vmem = vmem_bytes(p, block_oh, block_oc, bits=bits)
+    vmem = vmem_bytes(p, block_oh, block_oc, bits=bits, method=method)
     halo = (n_j * n_slab) / max(p.ih, 1) - 1.0
     return TilePlan(p, block_oh, block_oc, n_slab, n_j, n_c, grid_order,
-                    vmem, max(halo, 0.0))
+                    vmem, max(halo, 0.0), method)
 
 
 # Candidate grids mirror plan_blocks' search space; the autotuner measures
-# instead of guessing, so it also explores both explicit grid orders.
+# instead of guessing, so it also explores both explicit grid orders and
+# both kernel variants (single- vs double-buffered).
 _CAND_BI = (1, 2, 4, 8, 16, 32, 64)
 _CAND_BOC = (8, 16, 32, 64, 128, 256)
+_CAND_METHODS = ("mm2im", "mm2im_db")
 
 
 def candidate_plans(
     p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
     vmem_fraction: float = 0.75,
+    methods: tuple = _CAND_METHODS,
 ) -> List[TilePlan]:
-    """Every legal (block_oh, block_oc, grid_order) under the VMEM budget.
+    """Every legal (method, block_oh, block_oc, grid_order) under the budget.
 
     This is the autotuner's enumeration stage (paper Alg. 1 evaluated
     per-problem instead of once): all stride-aligned output-row blocks that
     don't overrun the output, all channel blocks up to O_c, both explicit
-    grid orders.  Deduplicated and budget-filtered; order is deterministic.
+    grid orders, and — where the pipeline has at least two row blocks to
+    overlap — the double-buffered kernel variant.  Each variant is
+    budget-filtered under its *own* VMEM residency model, so 'mm2im_db'
+    legally reaches block geometries 'mm2im' cannot hold.  Deduplicated;
+    order is deterministic.
     """
     budget = int(hw.vmem_bytes * vmem_fraction)
     s = p.stride
@@ -129,17 +150,22 @@ def candidate_plans(
         block_oh = s * bi
         if block_oh > max(p.oh, s):
             continue  # row block would exceed the whole output
+        n_j = -(-p.oh // block_oh)
         for boc in bocs:
-            if vmem_bytes(p, block_oh, boc, bits=bits) > budget:
-                continue
-            for order in ("bcj", "cbj"):
-                key = (block_oh, boc, order)
-                if key in seen:
+            for method in methods:
+                if method == "mm2im_db" and n_j < 2:
+                    continue  # nothing to pipeline against
+                if vmem_bytes(p, block_oh, boc, bits=bits,
+                              method=method) > budget:
                     continue
-                seen.add(key)
-                out.append(plan(p, batch=batch, bits=bits, hw=hw,
-                                block_oh=block_oh, block_oc=boc,
-                                grid_order=order))
+                for order in ("bcj", "cbj"):
+                    key = (method, block_oh, boc, order)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    out.append(plan(p, batch=batch, bits=bits, hw=hw,
+                                    block_oh=block_oh, block_oc=boc,
+                                    grid_order=order, method=method))
     return out
 
 

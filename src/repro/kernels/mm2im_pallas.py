@@ -1,6 +1,7 @@
 """MM2IM — fused MatMul + col2im transposed convolution, as a Pallas TPU kernel.
 
-This is the TPU-native adaptation of the paper's accelerator (DESIGN.md §2):
+This is the TPU-native adaptation of the paper's accelerator
+(docs/DESIGN.md §2):
 
 * **Tiled MM2IM (Alg. 1)** -> the Pallas ``grid = (batch, O_h row-blocks,
   O_c blocks)``.  Each grid cell is *weight-stationary* in its O_c block
@@ -30,10 +31,18 @@ This is the TPU-native adaptation of the paper's accelerator (DESIGN.md §2):
 The kernel supports f32 / bf16 inputs (f32 accumulation) and the paper's
 8-bit mode (int8 x int8 -> int32 accumulation, optional requantization), and
 fuses the PPU epilogue (bias + activation + requant).
+
+The host-side staging (:func:`prepare_mm2im`) and the per-block math
+(:func:`col2im_accumulate`, :func:`ppu_epilogue`) are shared with the
+double-buffered pipeline variant (``kernels/mm2im_db_pallas.py``), so the
+two kernels are bit-identical by construction — they differ only in how
+the input slab reaches VMEM (resident whole-input block here vs. pipelined
+two-slot DMA there; docs/DESIGN.md §2.4).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Callable, Optional
@@ -113,36 +122,31 @@ def plan_blocks(
     return best
 
 
-def _mm2im_kernel(
-    x_ref, w_ref, b_ref, s_ref, o_ref, *,
-    s: int, ks: int, ct: int, cl: int,
-    bi: int, n_slab: int, iw: int, ow: int, ow_p: int, boc: int,
-    delta: int, acc_dtype, out_dtype, activation: str, out_scale,
-    per_channel: bool,
-):
-    """One grid cell: output rows [j*S*bi, (j+1)*S*bi) x channels [c*boc, ...).
+def matmul_slab(slab, wb, *, n_slab: int, iw: int, ks: int, boc: int,
+                acc_dtype):
+    """IOM MatMul on the MXU: (n_slab*iw, ic) @ (ic, ks*ks*boc) -> mm5.
 
-    Grid order is (batch, oc-block, oh-block) — the paper's Alg. 1 loop nest:
-    weight-stationary across the inner output-row sweep (the w block index is
-    constant while j advances, so Pallas keeps it resident in VMEM), and the
-    whole-input block is resident for an entire batch element.
+    Shared by the single- and double-buffered kernels; identical operand
+    shapes and reduction order is what makes the two variants bit-identical.
     """
-    j = pl.program_id(2)  # inner output-row sweep (both grid orders)
-
-    # --- SendInputRows: the contiguous slab feeding this output row-block.
-    slab = x_ref[0, pl.dslice(j * bi, n_slab)]  # (n_slab, iw, ic)
     ic = slab.shape[-1]
-
-    # --- IOM MatMul on the MXU: (n_slab*iw, ic) @ (ic, ks*ks*boc).
-    wb = w_ref[...].reshape(ic, ks * ks * boc)
     mm = jax.lax.dot_general(
-        slab.reshape(n_slab * iw, ic), wb,
+        slab.reshape(n_slab * iw, ic), wb.reshape(ic, ks * ks * boc),
         (((1,), (0,)), ((), ())),
         preferred_element_type=acc_dtype,
     )
-    mm5 = mm.reshape(n_slab, iw, ks, ks, boc)
+    return mm.reshape(n_slab, iw, ks, ks, boc)
 
-    # --- col2im: output-stationary accumulator, residue-decomposed adds.
+
+def col2im_accumulate(mm5, *, s: int, ks: int, ct: int, cl: int, bi: int,
+                      n_slab: int, iw: int, ow: int, ow_p: int, boc: int,
+                      delta: int, acc_dtype):
+    """col2im for one row-block: output-stationary residue-decomposed adds.
+
+    The accumulator is viewed as ``(bi, S, Iw', S, boc)`` so every (kh, kw)
+    contribution is one static strided-slice add; fully cropped offsets are
+    skipped at trace time (cmap).  Returns ``(block_oh, ow_p, boc)``.
+    """
     block_oh = s * bi
     iw_p = ow_p // s
     acc = jnp.zeros((bi, s, iw_p, s, boc), acc_dtype)
@@ -162,20 +166,182 @@ def _mm2im_kernel(
                 continue  # cmap: fully cropped column offset — skip.
             part = mm5[r0:r1, c0:c1, kh, kw, :]
             acc = acc.at[r0 + qh : r1 + qh, a, c0 + qw : c1 + qw, b_, :].add(part)
+    return acc.reshape(block_oh, ow_p, boc)
 
-    out = acc.reshape(block_oh, ow_p, boc)
 
-    # --- PPU epilogue: bias + activation (+ per-tensor or per-channel
-    #     requant, TFLite-style), fused before the single HBM write.
-    out = out + b_ref[...].astype(acc_dtype)[None, None, :]
+def ppu_epilogue(out, bias_vec, scales_vec, *, acc_dtype, activation: str,
+                 out_scale, per_channel: bool, out_dtype):
+    """PPU epilogue: bias + (per-tensor or per-channel, TFLite-style)
+    requant + activation, fused before the single HBM write."""
+    out = out + bias_vec.astype(acc_dtype)[None, None, :]
     if per_channel:
-        out = jnp.round(out.astype(jnp.float32) * s_ref[...][None, None, :])
+        out = jnp.round(out.astype(jnp.float32) * scales_vec[None, None, :])
         out = jnp.clip(out, -128.0, 127.0)
     elif out_scale is not None:
         out = jnp.round(out.astype(jnp.float32) * out_scale)
         out = jnp.clip(out, -128.0, 127.0)
     out = _ACTIVATIONS[activation](out)
-    o_ref[0, :, :, :] = out.astype(out_dtype)
+    return out.astype(out_dtype)
+
+
+def _mm2im_kernel(
+    x_ref, w_ref, b_ref, s_ref, o_ref, *,
+    s: int, ks: int, ct: int, cl: int,
+    bi: int, n_slab: int, iw: int, ow: int, ow_p: int, boc: int,
+    delta: int, acc_dtype, out_dtype, activation: str, out_scale,
+    per_channel: bool,
+):
+    """One grid cell: output rows [j*S*bi, (j+1)*S*bi) x channels [c*boc, ...).
+
+    Grid order is (batch, oc-block, oh-block) — the paper's Alg. 1 loop nest:
+    weight-stationary across the inner output-row sweep (the w block index is
+    constant while j advances, so Pallas keeps it resident in VMEM), and the
+    whole-input block is resident for an entire batch element.
+    """
+    j = pl.program_id(2)  # inner output-row sweep (both grid orders)
+
+    # --- SendInputRows: the contiguous slab feeding this output row-block.
+    slab = x_ref[0, pl.dslice(j * bi, n_slab)]  # (n_slab, iw, ic)
+
+    mm5 = matmul_slab(slab, w_ref[...], n_slab=n_slab, iw=iw, ks=ks, boc=boc,
+                      acc_dtype=acc_dtype)
+    out = col2im_accumulate(mm5, s=s, ks=ks, ct=ct, cl=cl, bi=bi,
+                            n_slab=n_slab, iw=iw, ow=ow, ow_p=ow_p, boc=boc,
+                            delta=delta, acc_dtype=acc_dtype)
+    o_ref[0, :, :, :] = ppu_epilogue(
+        out, b_ref[...], s_ref[...], acc_dtype=acc_dtype,
+        activation=activation, out_scale=out_scale, per_channel=per_channel,
+        out_dtype=out_dtype)
+
+
+@dataclasses.dataclass
+class MM2IMPrep:
+    """Staged operands + resolved tile geometry for one MM2IM launch.
+
+    Produced by :func:`prepare_mm2im` and consumed by both the single-
+    buffered kernel below and the double-buffered pipeline variant
+    (``mm2im_db_pallas``), so the host-side staging — padding, weight
+    relayout, block validation, grid-order resolution — is decided in
+    exactly one place.
+    """
+
+    # Staged arrays.
+    x_p: jax.Array        # (B, Ihp, Iw, Ic) zero-padded input
+    w3: jax.Array         # (Ic, Ks^2, Oc_p) relaid-out filters
+    bias_p: jax.Array     # (Oc_p,) accumulator-dtype bias
+    scales_p: jax.Array   # (Oc_p,) per-channel requant scales (or ones)
+    # Problem geometry.
+    b: int; ih: int; iw: int; ic: int; ks: int; oc: int
+    s: int; ct: int; cl: int; oh: int; ow: int
+    # Tile geometry (paper Alg. 1).
+    block_oh: int; boc: int; bi: int; delta: int
+    n_slab: int; n_j: int; n_c: int; ihp: int; ow_p: int; oc_p: int
+    # Dtypes / epilogue.
+    acc_dtype: object; out_dtype: object
+    per_channel: bool; out_scale: Optional[float]; activation: str
+    grid_order: str; interpret: bool
+
+    def kernel_kwargs(self) -> dict:
+        """The static kwargs shared by both kernel bodies."""
+        return dict(
+            s=self.s, ks=self.ks, ct=self.ct, cl=self.cl, bi=self.bi,
+            n_slab=self.n_slab, iw=self.iw, ow=self.ow, ow_p=self.ow_p,
+            boc=self.boc, delta=self.delta, acc_dtype=self.acc_dtype,
+            out_dtype=self.out_dtype, activation=self.activation,
+            out_scale=None if self.per_channel else self.out_scale,
+            per_channel=self.per_channel)
+
+
+def prepare_mm2im(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array],
+    *,
+    stride: int,
+    padding: str,
+    block_oh: Optional[int],
+    block_oc: Optional[int],
+    activation: str,
+    out_scale,
+    out_dtype,
+    grid_order: str,
+    interpret: Optional[bool],
+) -> MM2IMPrep:
+    """Host-side staging (the driver role / 0x01 Configure instruction)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, ih, iw, ic = x.shape
+    ks, ks2, oc, wic = w.shape
+    assert ks == ks2 and wic == ic, (w.shape, x.shape)
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    per_channel = out_scale is not None and not isinstance(out_scale, float)
+    if out_dtype is None:
+        out_dtype = jnp.int8 if (integer and out_scale is not None) else acc_dtype
+
+    if block_oh is None or block_oc is None:
+        p_oh, p_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
+                                 in_bytes=x.dtype.itemsize)
+        block_oh = block_oh or p_oh
+        block_oc = block_oc or p_oc
+    # Explicit-plan path: plan_blocks validates the override (stride
+    # alignment, positivity) in one place for every caller.
+    block_oh, block_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
+                                     override=(block_oh, block_oc))
+    bi = block_oh // s
+    boc = block_oc
+
+    # Geometry of the input slab per output row-block (docs/DESIGN.md §2).
+    delta = _ceil_div(max(ks - 1 - ct, 0), s)  # top halo (in input rows)
+    eps = (ct - 1) // s                        # bottom halo correction
+    n_slab = bi + delta + eps + 1
+    n_j = _ceil_div(oh, block_oh)
+    n_c = _ceil_div(oc, boc)
+    ow_p = _ceil_div(ow, s) * s
+
+    # Host-side data staging: zero-pad so every slab and every block index
+    # is in range; jit fuses these pads into the caller.
+    ihp = (n_j - 1) * bi + n_slab
+    x_p = jnp.pad(x, ((0, 0), (delta, ihp - delta - ih), (0, 0), (0, 0)))
+    oc_p = n_c * boc
+    w3 = jnp.transpose(w, (3, 0, 1, 2)).reshape(ic, ks * ks, oc)  # (K, Ks^2, Oc)
+    w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, oc_p - oc)))
+    if bias is None:
+        bias = jnp.zeros((oc,), acc_dtype)
+    bias_p = jnp.pad(bias.astype(acc_dtype), (0, oc_p - oc))
+    if per_channel:
+        scales_p = jnp.pad(jnp.asarray(out_scale, jnp.float32),
+                           (0, oc_p - oc), constant_values=1.0)
+    else:
+        scales_p = jnp.ones((oc_p,), jnp.float32)
+
+    # Grid order (Alg. 1 loop-nest choice): j (output rows) is always the
+    # inner sweep; the outer pair decides which operand stays resident in
+    # VMEM across the most steps.  'bcj' = activation-stationary (input
+    # fetched once per batch element), 'cbj' = weight-stationary (each
+    # filter block fetched exactly once, the paper's Alg. 1 order).  'auto'
+    # picks by which operand carries more HBM traffic.
+    if grid_order == "auto":
+        w_bytes = ic * ks * ks * oc_p * w.dtype.itemsize
+        x_bytes = b * ihp * iw * ic * x.dtype.itemsize
+        grid_order = "cbj" if w_bytes > x_bytes else "bcj"
+    if grid_order not in ("bcj", "cbj"):
+        raise ValueError(
+            f"grid_order must be 'auto'|'bcj'|'cbj', got {grid_order!r}")
+
+    return MM2IMPrep(
+        x_p=x_p, w3=w3, bias_p=bias_p, scales_p=scales_p,
+        b=b, ih=ih, iw=iw, ic=ic, ks=ks, oc=oc, s=s, ct=ct, cl=cl,
+        oh=oh, ow=ow, block_oh=block_oh, boc=boc, bi=bi, delta=delta,
+        n_slab=n_slab, n_j=n_j, n_c=n_c, ihp=ihp, ow_p=ow_p, oc_p=oc_p,
+        acc_dtype=acc_dtype, out_dtype=out_dtype, per_channel=per_channel,
+        out_scale=out_scale, activation=activation, grid_order=grid_order,
+        interpret=interpret)
 
 
 def mm2im_tconv(
@@ -205,104 +371,39 @@ def mm2im_tconv(
       out_scale: if set (int8 mode), requantize int32 accum -> int8.
       interpret: force Pallas interpret mode (defaults to True off-TPU).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    b, ih, iw, ic = x.shape
-    ks, ks2, oc, wic = w.shape
-    assert ks == ks2 and wic == ic, (w.shape, x.shape)
-    s = stride
-    ct, cl = crop_offsets(ks, s, padding)
-    oh = out_size(ih, ks, s, padding)
-    ow = out_size(iw, ks, s, padding)
+    p = prepare_mm2im(
+        x, w, bias, stride=stride, padding=padding, block_oh=block_oh,
+        block_oc=block_oc, activation=activation, out_scale=out_scale,
+        out_dtype=out_dtype, grid_order=grid_order, interpret=interpret)
 
-    integer = jnp.issubdtype(x.dtype, jnp.integer)
-    acc_dtype = jnp.int32 if integer else jnp.float32
-    per_channel = out_scale is not None and not isinstance(out_scale, float)
-    if out_dtype is None:
-        out_dtype = jnp.int8 if (integer and out_scale is not None) else acc_dtype
+    kernel = functools.partial(_mm2im_kernel, **p.kernel_kwargs())
 
-    if block_oh is None or block_oc is None:
-        p_oh, p_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
-                                 in_bytes=x.dtype.itemsize)
-        block_oh = block_oh or p_oh
-        block_oc = block_oc or p_oc
-    # Explicit-plan path: plan_blocks validates the override (stride
-    # alignment, positivity) in one place for every caller.
-    block_oh, block_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
-                                     override=(block_oh, block_oc))
-    bi = block_oh // s
-    boc = block_oc
-
-    # Geometry of the input slab per output row-block (DESIGN.md §2).
-    delta = _ceil_div(max(ks - 1 - ct, 0), s)  # top halo (in input rows)
-    eps = (ct - 1) // s                        # bottom halo correction
-    n_slab = bi + delta + eps + 1
-    n_j = _ceil_div(oh, block_oh)
-    n_c = _ceil_div(oc, boc)
-    ow_p = _ceil_div(ow, s) * s
-
-    # Host-side data staging (the driver role): zero-pad so every slab and
-    # every block index is in range; jit fuses these pads into the caller.
-    ihp = (n_j - 1) * bi + n_slab
-    x_p = jnp.pad(x, ((0, 0), (delta, ihp - delta - ih), (0, 0), (0, 0)))
-    oc_p = n_c * boc
-    w3 = jnp.transpose(w, (3, 0, 1, 2)).reshape(ic, ks * ks, oc)  # (K, Ks^2, Oc)
-    w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, oc_p - oc)))
-    if bias is None:
-        bias = jnp.zeros((oc,), acc_dtype)
-    bias_p = jnp.pad(bias.astype(acc_dtype), (0, oc_p - oc))
-    if per_channel:
-        scales_p = jnp.pad(jnp.asarray(out_scale, jnp.float32),
-                           (0, oc_p - oc), constant_values=1.0)
-    else:
-        scales_p = jnp.ones((oc_p,), jnp.float32)
-
-    kernel = functools.partial(
-        _mm2im_kernel,
-        s=s, ks=ks, ct=ct, cl=cl, bi=bi, n_slab=n_slab, iw=iw, ow=ow,
-        ow_p=ow_p, boc=boc, delta=delta, acc_dtype=acc_dtype,
-        out_dtype=out_dtype, activation=activation,
-        out_scale=None if per_channel else out_scale,
-        per_channel=per_channel,
-    )
-
-    # Grid order (Alg. 1 loop-nest choice): j (output rows) is always the
-    # inner sweep; the outer pair decides which operand stays resident in
-    # VMEM across the most steps.  'bcj' = activation-stationary (input
-    # fetched once per batch element), 'cbj' = weight-stationary (each
-    # filter block fetched exactly once, the paper's Alg. 1 order).  'auto'
-    # picks by which operand carries more HBM traffic.
-    if grid_order == "auto":
-        w_bytes = ic * ks * ks * oc_p * w.dtype.itemsize
-        x_bytes = b * ihp * iw * ic * x.dtype.itemsize
-        grid_order = "cbj" if w_bytes > x_bytes else "bcj"
-    if grid_order == "bcj":
-        grid = (b, n_c, n_j)
+    if p.grid_order == "bcj":
+        grid = (p.b, p.n_c, p.n_j)
         ix = lambda b_, c, j: (b_, 0, 0, 0)
         iw_ = lambda b_, c, j: (0, 0, c)
         ib = lambda b_, c, j: (c,)
         io = lambda b_, c, j: (b_, j, 0, c)
-    elif grid_order == "cbj":
-        grid = (n_c, b, n_j)
+    else:  # "cbj"
+        grid = (p.n_c, p.b, p.n_j)
         ix = lambda c, b_, j: (b_, 0, 0, 0)
         iw_ = lambda c, b_, j: (0, 0, c)
         ib = lambda c, b_, j: (c,)
         io = lambda c, b_, j: (b_, j, 0, c)
-    else:
-        raise ValueError(f"grid_order must be 'auto'|'bcj'|'cbj', got {grid_order!r}")
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, ihp, iw, ic), ix),
-            pl.BlockSpec((ic, ks * ks, boc), iw_),
-            pl.BlockSpec((boc,), ib),
-            pl.BlockSpec((boc,), ib),
+            pl.BlockSpec((1, p.ihp, p.iw, p.ic), ix),
+            pl.BlockSpec((p.ic, p.ks * p.ks, p.boc), iw_),
+            pl.BlockSpec((p.boc,), ib),
+            pl.BlockSpec((p.boc,), ib),
         ],
-        out_specs=pl.BlockSpec((1, block_oh, ow_p, boc), io),
-        out_shape=jax.ShapeDtypeStruct((b, n_j * block_oh, ow_p, oc_p), out_dtype),
-        interpret=interpret,
-    )(x_p, w3, bias_p, scales_p)
+        out_specs=pl.BlockSpec((1, p.block_oh, p.ow_p, p.boc), io),
+        out_shape=jax.ShapeDtypeStruct(
+            (p.b, p.n_j * p.block_oh, p.ow_p, p.oc_p), p.out_dtype),
+        interpret=p.interpret,
+    )(p.x_p, p.w3, p.bias_p, p.scales_p)
 
-    return out[:, :oh, :ow, :oc]
+    return out[:, :p.oh, :p.ow, :p.oc]

@@ -6,6 +6,9 @@ kernel registry (``kernels/registry.py``); the built-in methods are:
 
   * ``'mm2im'``         — the paper's technique: fused Pallas kernel
                           (``mm2im_pallas.mm2im_tconv``).  Default.
+  * ``'mm2im_db'``      — double-buffered pipeline variant: per-row-block
+                          slab DMA overlapped with MatMul+col2im
+                          (``mm2im_db_pallas``); bit-identical to 'mm2im'.
   * ``'iom_unfused'``   — paper Eq. (2) unfused: MatMul -> HBM -> col2im
                           scatter (the XLA-level baseline).
   * ``'zero_insertion'``— §II-A method (i) baseline.
@@ -14,24 +17,35 @@ kernel registry (``kernels/registry.py``); the built-in methods are:
 
 An explicit tile plan (``registry.Plan`` or a ``(block_oh, block_oc[,
 grid_order])`` tuple — typically produced by ``core/autotune.py``) can be
-passed as ``plan=``; it flows into the Pallas kernel's block geometry.
-Methods that don't tile (everything but ``'mm2im'``) reject explicit plans.
+passed as ``plan=``; it flows into the Pallas kernel's block geometry, and
+a plan carrying ``method='mm2im_db'`` upgrades the default dispatch to the
+variant it was tuned for.  Methods that don't tile reject explicit plans.
 
-Training support: the Pallas forward is wrapped in ``jax.custom_vjp`` whose
-backward pass is the (automatically derived) VJP of the mathematically
-identical dilated-conv formulation — so examples/train_dcgan.py trains
-*through* the MM2IM kernel.
+**Automatic plan consumption** (docs/AUTOTUNER.md): when no ``plan=`` is
+given and the method supports plans, the dispatcher looks up the on-disk
+autotuner cache by problem key — shapes, dtype, batch — at trace time.
+Precedence: explicit ``plan=`` > cache hit > ``plan_blocks`` heuristic.
+Disable with ``REPRO_AUTOTUNE_AUTOLOAD=0``.  The lookup happens once per
+jit trace, so a cache written *after* a shape was first compiled is only
+seen by new traces.
+
+Training support: the Pallas forwards are wrapped in ``jax.custom_vjp``
+whose backward pass is the (automatically derived) VJP of the
+mathematically identical dilated-conv formulation — so
+examples/train_dcgan.py trains *through* the MM2IM kernels.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import baselines, ref, registry
+from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
 from repro.kernels.mm2im_pallas import mm2im_tconv
 from repro.kernels.registry import Plan, PlanLike
 
@@ -44,40 +58,50 @@ def _fwd_math(x, w, bias, *, stride, padding):
     return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _mm2im_diff(x, w, bias, stride, padding, activation, plan):
-    kw = {}
-    if plan is not None:
-        kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
-                  grid_order=plan.grid_order)
-    out = mm2im_tconv(x, w, bias, stride=stride, padding=padding,
-                      activation=activation, **kw)
-    return out
+def _make_mm2im_diff(kernel_fn):
+    """custom_vjp wrapper for a fused MM2IM-family forward kernel.
+
+    The backward pass is the VJP of the mathematically identical
+    dilated-conv formulation; both Pallas variants share it because they
+    compute the same function (bit-identical forwards).
+    """
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+    def diff(x, w, bias, stride, padding, activation, plan):
+        kw = {}
+        if plan is not None:
+            kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
+                      grid_order=plan.grid_order)
+        return kernel_fn(x, w, bias, stride=stride, padding=padding,
+                         activation=activation, **kw)
+
+    def fwd(x, w, bias, stride, padding, activation, plan):
+        out = diff(x, w, bias, stride, padding, activation, plan)
+        return out, (x, w, bias, out)
+
+    def bwd(stride, padding, activation, plan, res, g):
+        x, w, bias, out = res
+        # Activation backward (epilogue was fused into the kernel).
+        if activation == "relu":
+            g = g * (out > 0)
+        elif activation == "tanh":
+            g = g * (1.0 - out * out)
+        elif activation == "leaky_relu":
+            g = g * jnp.where(out >= 0, 1.0, 0.2)
+        bias0 = jnp.zeros((w.shape[2],), jnp.float32) if bias is None else bias
+        _, vjp = jax.vjp(
+            lambda xx, ww, bb: _fwd_math(xx, ww, bb, stride=stride,
+                                         padding=padding),
+            x, w, bias0)
+        dx, dw, db = vjp(g)
+        return dx, dw, None if bias is None else db
+
+    diff.defvjp(fwd, bwd)
+    return diff
 
 
-def _mm2im_fwd(x, w, bias, stride, padding, activation, plan):
-    out = _mm2im_diff(x, w, bias, stride, padding, activation, plan)
-    return out, (x, w, bias, out)
-
-
-def _mm2im_bwd(stride, padding, activation, plan, res, g):
-    x, w, bias, out = res
-    # Activation backward (epilogue was fused into the kernel).
-    if activation == "relu":
-        g = g * (out > 0)
-    elif activation == "tanh":
-        g = g * (1.0 - out * out)
-    elif activation == "leaky_relu":
-        g = g * jnp.where(out >= 0, 1.0, 0.2)
-    bias0 = jnp.zeros((w.shape[2],), jnp.float32) if bias is None else bias
-    _, vjp = jax.vjp(
-        lambda xx, ww, bb: _fwd_math(xx, ww, bb, stride=stride, padding=padding),
-        x, w, bias0)
-    dx, dw, db = vjp(g)
-    return dx, dw, None if bias is None else db
-
-
-_mm2im_diff.defvjp(_mm2im_fwd, _mm2im_bwd)
+_mm2im_diff = _make_mm2im_diff(mm2im_tconv)
+_mm2im_db_diff = _make_mm2im_diff(mm2im_db_tconv)
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +114,13 @@ _mm2im_diff.defvjp(_mm2im_fwd, _mm2im_bwd)
     description="fused Pallas MM2IM kernel (paper technique; default)")
 def _mm2im_impl(x, w, bias, *, stride, padding, activation, plan):
     return _mm2im_diff(x, w, bias, stride, padding, activation, plan)
+
+
+@registry.register(
+    "mm2im_db", fuses_bias=True, fuses_activation=True, supports_plan=True,
+    description="double-buffered MM2IM: slab DMA pipelined against compute")
+def _mm2im_db_impl(x, w, bias, *, stride, padding, activation, plan):
+    return _mm2im_db_diff(x, w, bias, stride, padding, activation, plan)
 
 
 @registry.register(
@@ -116,6 +147,62 @@ def _lax_impl(x, w, bias, *, stride, padding, activation, plan):
 
 
 # ---------------------------------------------------------------------------
+# Automatic plan-cache consumption.
+# ---------------------------------------------------------------------------
+
+AUTOLOAD_ENV = "REPRO_AUTOTUNE_AUTOLOAD"
+
+# Ring of (cache_key, Plan) pairs auto-consumed by tconv/tconv_int8 —
+# observability for tests and debugging (appends happen at trace time).
+_CONSUMED: list = []
+_CONSUMED_CAP = 64
+
+
+def consumed_plans() -> tuple:
+    """(cache_key, Plan) pairs auto-consumed so far, oldest first."""
+    return tuple(_CONSUMED)
+
+
+def clear_consumed_plans() -> None:
+    _CONSUMED.clear()
+
+
+def _autoload_enabled() -> bool:
+    return os.environ.get(AUTOLOAD_ENV, "1").lower() not in ("0", "false",
+                                                             "off")
+
+
+def _auto_plan(x, w, stride: int, padding: str) -> Optional[Plan]:
+    """Trace-time lookup of a tuned plan for this problem key (or None).
+
+    Runs while ``tconv`` traces, so shapes/dtypes are concrete; any cache
+    problem degrades to the heuristic default rather than raising.
+    """
+    if not _autoload_enabled():
+        return None
+    try:
+        from repro.core.autotune import cached_plan, cache_key
+        from repro.core.maps import TConvProblem
+
+        b, ih, iw, ic = x.shape
+        ks, _, oc, _ = w.shape
+        p = TConvProblem(ih, iw, ic, ks, oc, stride, padding)
+        plan = cached_plan(p, dtype=x.dtype, batch=b)
+        if plan is None:
+            return None
+        if plan.block_oh % stride != 0:
+            # Corrupt/hand-edited geometry: an auto-loaded plan degrades to
+            # the heuristic instead of failing dispatch (explicit plans
+            # with the same defect still raise — that's a caller error).
+            return None
+        _CONSUMED.append((cache_key(p, dtype=x.dtype, batch=b), plan))
+        del _CONSUMED[:-_CONSUMED_CAP]
+        return plan
+    except Exception:
+        return None  # never let a broken cache break dispatch
+
+
+# ---------------------------------------------------------------------------
 # Dispatch.
 # ---------------------------------------------------------------------------
 
@@ -137,14 +224,30 @@ def tconv(
     """Transposed convolution.  x: (B,Ih,Iw,Ic); w: (Ks,Ks,Oc,Ic) HWOI."""
     spec = registry.get(method)
     plan = registry.as_plan(plan)
+    if plan is not None and not spec.supports_plan:
+        raise ValueError(
+            f"method {method!r} does not accept an explicit tile plan")
+    if plan is None and spec.supports_plan:
+        plan = _auto_plan(x, w, stride, padding)  # cache hit > heuristic
     if plan is not None:
-        if not spec.supports_plan:
-            raise ValueError(
-                f"method {method!r} does not accept an explicit tile plan")
         if plan.block_oh % stride != 0:
             raise ValueError(
                 f"plan block_oh={plan.block_oh} must be a multiple of "
                 f"stride {stride}")
+        # A plan tuned for a specific kernel variant upgrades the *default*
+        # dispatch to that variant; an explicitly requested non-default
+        # method wins over the plan's preference (geometry still applies).
+        # An unregistered plan.method (stale cache entry, plugin variant
+        # not imported in this process) quietly keeps the default — a bad
+        # cache must never break inference.
+        if (plan.method is not None and plan.method != method
+                and method == "mm2im"):
+            try:
+                variant = registry.get(plan.method)
+            except ValueError:
+                variant = None
+            if variant is not None and variant.supports_plan:
+                spec = variant
     # Epilogue order is bias -> activation, so activation may only be fused
     # into the kernel when the bias is also applied inside it (fused or
     # absent); otherwise the kernel would activate before the bias add.
@@ -175,14 +278,27 @@ def tconv_int8(
 
     ``out_scale`` is a python float (per-tensor requant) or a length-Oc
     array (TFLite-style per-channel requant, fused in the PPU epilogue).
+    With no explicit ``plan=``, the autotuner cache is consulted under the
+    int8 problem key; a plan tuned for ``'mm2im_db'`` runs the
+    double-buffered kernel (bit-identical int32 accumulation either way).
     """
     if not isinstance(out_scale, float):
         import numpy as _np
         out_scale = _np.asarray(out_scale, _np.float32)
     plan = registry.as_plan(plan)
+    if plan is None:
+        plan = _auto_plan(x_q, w_q, stride, padding)
+    kernel = mm2im_tconv
     kw = {}
     if plan is not None:
         kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
                   grid_order=plan.grid_order)
-    return mm2im_tconv(x_q, w_q, bias_q, stride=stride, padding=padding,
-                       out_scale=out_scale, **kw)
+        if plan.method not in (None, "mm2im"):
+            # Same variant-upgrade rule as tconv, through the autotuner's
+            # runner table (these entry points take out_scale, unlike the
+            # registry dispatch signature).  Unknown variants degrade to
+            # the default kernel — a bad cache must never break inference.
+            from repro.core.autotune import KERNEL_RUNNERS
+            kernel = KERNEL_RUNNERS.get(plan.method, mm2im_tconv)
+    return kernel(x_q, w_q, bias_q, stride=stride, padding=padding,
+                  out_scale=out_scale, **kw)

@@ -2,23 +2,57 @@
 
 The seed hard-coded a closed ``_METHODS`` tuple inside ``kernels/ops.py``;
 this module replaces it with an open registry so new implementations (a
-future fully-pipelined DMA kernel, a sparse variant, a GPU port) plug in
-without touching the dispatch site, and so the autotuner
-(``core/autotune.py``) can hand any implementation an explicit tile plan.
+pipelined-DMA kernel, a sparse variant, a GPU port) plug in without
+touching the dispatch site, and so the autotuner (``core/autotune.py``)
+can hand any implementation an explicit tile plan.
 
 Two value types live here because every other layer depends on them and
 they must stay import-cycle-free (this module imports only the stdlib):
 
 * :class:`Plan` — an explicit ``(block_oh, block_oc, grid_order)`` tile
-  plan.  Hashable (frozen dataclass) so it can ride through ``jax.jit``
-  static arguments; produced by ``core/autotune.py`` or built by hand.
+  plan, optionally pinning the kernel variant that should execute it
+  (``method`` — e.g. ``'mm2im'`` vs ``'mm2im_db'``).  Hashable (frozen
+  dataclass) so it can ride through ``jax.jit`` static arguments; produced
+  by ``core/autotune.py`` or built by hand.
 * :class:`KernelSpec` — one registered implementation plus its dispatch
   capabilities (does it fuse bias/activation, does it accept a Plan, is it
   differentiable).
 
-Registration happens at import time in ``kernels/ops.py`` for the five
+Registration happens at import time in ``kernels/ops.py`` for the six
 built-in methods; tests and extensions use :func:`register` /
 :func:`unregister` directly.
+
+Registering a third-party kernel variant
+----------------------------------------
+A variant is one function with the dispatch signature plus a
+:func:`register` decoration — nothing else in the stack changes
+(docs/DESIGN.md §3 walks through the dataflow contract):
+
+    from repro.kernels import registry
+
+    @registry.register(
+        "my_variant",
+        fuses_bias=True,          # dispatcher skips its own bias add
+        fuses_activation=True,    # dispatcher skips its own activation
+        supports_plan=True,       # accepts an explicit registry.Plan
+        description="sparse MM2IM with 2:4 weight pruning")
+    def my_variant(x, w, bias, *, stride, padding, activation, plan):
+        ...
+        return out_nhwc
+
+    out = ops.tconv(x, w, stride=2, method="my_variant")
+
+Declare only the epilogue stages the kernel truly fuses: ``ops.tconv``
+applies whatever the implementation does not fuse, which is what keeps
+every method numerically interchangeable.  A variant with
+``supports_plan=True`` becomes autotunable the moment
+``core/autotune.py``'s measure loop knows how to call it (see
+``core.autotune.KERNEL_RUNNERS``); tuned plans then carry
+``Plan.method = "my_variant"`` and ``ops.tconv`` dispatches back to it
+automatically.  The int8 requant path (``ops.tconv_int8``) bypasses the
+registry signature (it needs ``out_scale``) and honors ``Plan.method``
+via ``KERNEL_RUNNERS`` instead — a variant that should serve tuned int8
+plans must provide a runner there with the ``mm2im_tconv`` signature.
 """
 
 from __future__ import annotations
@@ -34,11 +68,16 @@ class Plan:
     ``block_oh`` must be a multiple of the stride it is used with;
     ``grid_order`` is ``'bcj'`` (activation-stationary), ``'cbj'``
     (weight-stationary, the paper's Alg. 1 order) or ``'auto'``.
+
+    ``method`` optionally pins the kernel variant the plan was tuned for
+    (e.g. ``'mm2im_db'`` for the double-buffered pipeline).  ``None`` means
+    "no preference": the dispatcher's requested method runs the geometry.
     """
 
     block_oh: int
     block_oc: int
     grid_order: str = "auto"
+    method: Optional[str] = None
 
     def __post_init__(self):
         if self.block_oh < 1 or self.block_oc < 1:
@@ -48,12 +87,18 @@ class Plan:
                 f"grid_order must be 'auto'|'bcj'|'cbj', got {self.grid_order!r}")
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        d = {"block_oh": self.block_oh, "block_oc": self.block_oc,
+             "grid_order": self.grid_order}
+        if self.method is not None:
+            d["method"] = self.method
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "Plan":
+        method = d.get("method")
         return cls(int(d["block_oh"]), int(d["block_oc"]),
-                   str(d.get("grid_order", "auto")))
+                   str(d.get("grid_order", "auto")),
+                   None if method is None else str(method))
 
 
 PlanLike = Union[Plan, Tuple[int, int], Tuple[int, int, str], None]

@@ -2,7 +2,7 @@
 
 Every ``init_*`` returns ``(params, specs)`` — two trees with identical
 structure, the second holding ``jax.sharding.PartitionSpec`` leaves over the
-production mesh axes ``('pod', 'data', 'model')`` (see DESIGN.md §6).
+production mesh axes ``('pod', 'data', 'model')`` (see docs/DESIGN.md §6).
 Sharding conventions:
 
 * FSDP ("zero-3") storage axis is ``'data'``; tensor-parallel axis is
@@ -151,6 +151,13 @@ def tconv_layer(params, x, *, stride: int, padding: str = "SAME",
     ``plan`` is an explicit tile plan (``kernels.registry.Plan`` or a
     ``(block_oh, block_oc[, grid_order])`` tuple), typically produced by
     ``core.autotune.autotune`` — this is how tuned plans reach model code.
+
+    With ``plan=None`` the dispatcher consumes the on-disk autotuner cache
+    automatically: if this layer's problem key (shapes, dtype, batch) was
+    ever tuned, the tuned plan — including a double-buffered kernel
+    preference (``Plan.method``) — applies with no threading here.
+    Precedence: explicit ``plan`` > cache hit > heuristic
+    (docs/AUTOTUNER.md).
     """
     from repro.kernels.ops import tconv
 

@@ -24,8 +24,36 @@ from repro.kernels.ops import tconv
 
 
 def _plan_for(plans, name):
-    """Look up an explicit tile plan for TCONV layer ``name`` (or None)."""
+    """Look up an explicit tile plan for TCONV layer ``name`` (or None).
+
+    ``None`` is not "no plan": with no explicit entry, ``ops.tconv``
+    consults the autotuner's on-disk plan cache by problem key at trace
+    time, so a generator whose layers were ever tuned runs tuned plans
+    (and the tuned kernel variant) with ``plans=None`` here.
+    """
     return None if plans is None else plans.get(name)
+
+
+def auto_plans(problems: dict, *, batch: int = 1, dtype=None) -> dict:
+    """Cached tile plans for a ``{layer_name: TConvProblem}`` mapping.
+
+    The explicit form of what ``ops.tconv`` does implicitly: look each
+    layer's problem key up in the autotuner cache (misses are simply
+    omitted).  Useful when the caller wants to *inspect or log* which
+    layers run tuned (e.g. ``runtime/steps.py``'s GAN step builders)
+    rather than rely on the silent trace-time lookup.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.autotune import cached_plan
+
+    dtype = jnp.float32 if dtype is None else dtype
+    plans = {}
+    for name, prob in problems.items():
+        plan = cached_plan(prob, dtype=dtype, batch=batch)
+        if plan is not None:
+            plans[name] = plan
+    return plans
 
 
 def _conv_init(key, ks, cin, cout, scale=0.02):
@@ -102,15 +130,36 @@ def dcgan_generator(params, z, *, method: str = "mm2im", plans=None):
     return jnp.tanh(x)
 
 
+def dcgan_tconv_layers(params) -> list:
+    """Generator TCONV layer names ('t1'..'tN'), in forward order."""
+    names = []
+    i = 1
+    while f"t{i}" in params:
+        names.append(f"t{i}")
+        i += 1
+    return names
+
+
+def dcgan_output_geometry(params) -> tuple:
+    """(image_size, out_channels) of the generator: 4x4 base, one stride-2
+    doubling per TCONV layer, channels from the last layer's HWOI weight.
+
+    The single source of truth for the DCGAN topology assumptions —
+    ``runtime/steps.py`` derives its abstract input shapes from this.
+    """
+    names = dcgan_tconv_layers(params)
+    return 4 * 2 ** len(names), params[names[-1]].shape[2]
+
+
 def dcgan_tconv_problems(params) -> dict:
     """The TConvProblem of each generator TCONV layer (autotuner input)."""
     from repro.core.maps import TConvProblem
 
     probs = {}
     ih = 4
-    for i in (1, 2, 3, 4):
-        ks, _, oc, ic = params[f"t{i}"].shape
-        probs[f"t{i}"] = TConvProblem(ih, ih, ic, ks, oc, 2)
+    for name in dcgan_tconv_layers(params):
+        ks, _, oc, ic = params[name].shape
+        probs[name] = TConvProblem(ih, ih, ic, ks, oc, 2)
         ih *= 2
     return probs
 

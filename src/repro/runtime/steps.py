@@ -4,6 +4,14 @@ Each builder returns ``(jitted_fn, abstract_inputs, shardings)`` ready for
 ``.lower(...).compile()`` (the dry-run path) or direct execution (examples
 and smoke tests).  All lowering happens under ``jax.set_mesh`` so
 PartitionSpec-level constraints resolve against the production mesh.
+
+The GAN builders (:func:`make_gan_train_step`,
+:func:`make_gan_sample_step`) are the training/serve entry points for the
+paper's TCONV models; with no explicit ``plans=`` they resolve each
+generator layer's tile plan from the autotuner's on-disk cache
+(``core/autotune.py``) — tune once with ``autotune_sweep``, and every
+later training or serving process runs the tuned plans (and tuned kernel
+variant, single- vs double-buffered) with zero plan threading.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
 from repro.distributed import sharding as shd
-from repro.models import lm
+from repro.models import gan, lm
 from repro.models.config import ModelConfig
 from repro.optim import adamw
 
@@ -28,6 +36,7 @@ class StepBundle:
     fn: Any                 # jitted function
     abstract_args: tuple    # ShapeDtypeStruct pytrees for .lower(*args)
     kind: str
+    meta: Optional[dict] = None  # builder diagnostics (e.g. resolved plans)
 
 
 def usable_batch_axes(batch: int, mesh) -> tuple:
@@ -289,6 +298,119 @@ def make_decode_step(cfg: ModelConfig, mesh, *, batch: int, seq: int,
     fn = jax.jit(serve_step, donate_argnums=(1,))
     return StepBundle(fn=fn, abstract_args=(astate["params"], cache, tokens),
                       kind="decode")
+
+
+# ---------------------------------------------------------------------------
+# GAN steps (the paper's TCONV models) — plan-cache-aware.
+# ---------------------------------------------------------------------------
+
+
+def resolve_gan_plans(g_params, *, batch: int, dtype=jnp.float32,
+                      plans: Optional[dict] = None,
+                      method: str = "mm2im") -> dict:
+    """Per-layer tile plans for a DCGAN generator, cache-backed.
+
+    Precedence per layer: explicit ``plans`` entry > autotuner cache hit >
+    nothing (``ops.tconv`` falls back to the ``plan_blocks`` heuristic).
+    The returned mapping is what the step builders close over (exposed as
+    ``StepBundle.meta['plans']``), so callers can log which layers run
+    tuned and on which kernel variant.
+
+    When ``method`` does not accept explicit tile plans (the baselines:
+    'lax', 'iom_unfused', ...), the cache is not consulted — passing a
+    cached plan to those methods would be a dispatch error — and only the
+    caller's explicit ``plans`` (their mistake to make) pass through.
+    """
+    from repro.kernels import registry as kernel_registry
+
+    if not kernel_registry.get(method).supports_plan:
+        return dict(plans) if plans else {}
+    resolved = gan.auto_plans(gan.dcgan_tconv_problems(g_params),
+                              batch=batch, dtype=dtype)
+    if plans:
+        resolved.update(plans)
+    return resolved
+
+
+def make_gan_train_step(
+    g_params, d_params,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    *,
+    batch: int,
+    z_dim: int = 100,
+    method: str = "mm2im",
+    plans: Optional[dict] = None,
+) -> StepBundle:
+    """Alternating D/G DCGAN update with every generator TCONV on MM2IM.
+
+    State is ``(g_params, g_opt, d_params, d_opt)``; the returned fn maps
+    ``(state, z, real) -> (state, (d_loss, g_loss))``.  With ``plans=None``
+    the generator layers consume cached autotuner plans automatically
+    (see :func:`resolve_gan_plans`).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=2e-4, b1=0.5, b2=0.999, weight_decay=0.0, clip_norm=None,
+        warmup_steps=0, total_steps=1, schedule="constant")
+    plans = resolve_gan_plans(g_params, batch=batch, plans=plans,
+                              method=method)
+    img_size, out_ch = gan.dcgan_output_geometry(g_params)
+
+    def bce(logits, is_real: bool):
+        sign = 1.0 if is_real else -1.0
+        return jnp.mean(jax.nn.softplus(-sign * logits))
+
+    def train_step(state, z, real):
+        gp, g_opt, dp, d_opt = state
+
+        def d_loss(dpp):
+            fake = gan.dcgan_generator(gp, z, method=method, plans=plans)
+            return bce(gan.dcgan_discriminator(dpp, real), True) + \
+                bce(gan.dcgan_discriminator(dpp, fake), False)
+
+        dl, dg = jax.value_and_grad(d_loss)(dp)
+        dp, d_opt, _ = adamw.apply(dg, d_opt, dp, opt_cfg)
+
+        def g_loss(gpp):
+            fake = gan.dcgan_generator(gpp, z, method=method, plans=plans)
+            return bce(gan.dcgan_discriminator(dp, fake), True)
+
+        gl, gg = jax.value_and_grad(g_loss)(gp)
+        gp, g_opt, _ = adamw.apply(gg, g_opt, gp, opt_cfg)
+        return (gp, g_opt, dp, d_opt), (dl, gl)
+
+    astate = jax.eval_shape(
+        lambda: ((g_params, adamw.init(g_params, opt_cfg),
+                  d_params, adamw.init(d_params, opt_cfg))))
+    az = jax.ShapeDtypeStruct((batch, z_dim), jnp.float32)
+    areal = jax.ShapeDtypeStruct((batch, img_size, img_size, out_ch),
+                                 jnp.float32)
+    fn = jax.jit(train_step, donate_argnums=(0,))
+    return StepBundle(fn=fn, abstract_args=(astate, az, areal),
+                      kind="gan_train",
+                      meta={"plans": plans, "method": method})
+
+
+def make_gan_sample_step(
+    g_params,
+    *,
+    batch: int,
+    z_dim: int = 100,
+    method: str = "mm2im",
+    plans: Optional[dict] = None,
+) -> StepBundle:
+    """Generator-only serve step: ``z -> images``, cached plans consumed."""
+    plans = resolve_gan_plans(g_params, batch=batch, plans=plans,
+                              method=method)
+
+    def sample(gp, z):
+        return gan.dcgan_generator(gp, z, method=method, plans=plans)
+
+    az = jax.ShapeDtypeStruct((batch, z_dim), jnp.float32)
+    fn = jax.jit(sample)
+    return StepBundle(fn=fn,
+                      abstract_args=(jax.eval_shape(lambda: g_params), az),
+                      kind="gan_sample",
+                      meta={"plans": plans, "method": method})
 
 
 def make_step_for_cell(arch: str, shape: str, mesh) -> StepBundle:

@@ -1,0 +1,154 @@
+"""Double-buffered MM2IM kernel: bit-identity, parity, int8, dispatch.
+
+The contract of ``kernels/mm2im_db_pallas.py`` is strict: *bit-identical*
+to the single-buffered kernel for every geometry (the two share the host
+staging and block math; only the slab transport differs), on both the
+async-DMA pipeline and the synchronous interpret-safe fallback.  That is
+what lets the autotuner choose between the variants on speed alone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, registry
+from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
+from repro.kernels.mm2im_pallas import mm2im_tconv
+from repro.kernels.ops import tconv, tconv_int8
+from repro.kernels.registry import Plan
+
+RNG = np.random.default_rng(11)
+
+
+def rand_problem(ih, iw, ic, ks, oc, b=1):
+    x = RNG.standard_normal((b, ih, iw, ic), np.float32)
+    w = RNG.standard_normal((ks, ks, oc, ic), np.float32) * 0.1
+    return x, w
+
+
+SWEEP = [
+    # (B, Ih, Iw, Ic, Ks, Oc, S, padding)
+    (1, 2, 2, 2, 3, 2, 1, "SAME"),      # paper Fig. 2
+    (2, 4, 4, 3, 5, 2, 2, "SAME"),
+    (1, 9, 9, 16, 5, 8, 2, "SAME"),
+    (2, 5, 6, 4, 4, 3, 2, "SAME"),      # rectangular, even kernel
+    (1, 8, 8, 16, 9, 3, 1, "SAME"),     # StyleTransfer_3-like
+    (1, 3, 3, 4, 3, 2, 1, "VALID"),
+    (1, 4, 5, 4, 5, 3, 2, "VALID"),
+    (1, 5, 5, 4, 3, 2, 3, "VALID"),     # Ks < S (gapped output)
+    (1, 6, 6, 4, 2, 3, 2, "SAME"),      # Ks == S (no crop)
+]
+
+
+@pytest.mark.parametrize("pipeline", ["async", "sync"])
+@pytest.mark.parametrize("case", SWEEP, ids=[str(c) for c in SWEEP])
+def test_db_bit_identical_to_sb(case, pipeline):
+    """db == sb bitwise across strides/paddings, async and sync pipelines."""
+    b, ih, iw, ic, ks, oc, s, pad = case
+    x, w = rand_problem(ih, iw, ic, ks, oc, b)
+    got = np.asarray(mm2im_db_tconv(x, w, stride=s, padding=pad,
+                                    interpret=True, pipeline=pipeline))
+    want_sb = np.asarray(mm2im_tconv(x, w, stride=s, padding=pad,
+                                     interpret=True))
+    assert (got == want_sb).all(), (case, pipeline)
+    # And both agree with the unfused-IOM oracle.
+    want = np.asarray(ref.iom_reference(x, w, stride=s, padding=pad))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_oh,block_oc,grid_order",
+                         [(2, 4, "bcj"), (4, 8, "cbj"), (8, 16, "bcj"),
+                          (2, 3, "cbj")])
+def test_db_block_and_grid_invariance(block_oh, block_oc, grid_order):
+    x, w = rand_problem(8, 8, 16, 5, 12, b=2)
+    got = np.asarray(mm2im_db_tconv(x, w, stride=2, block_oh=block_oh,
+                                    block_oc=block_oc, grid_order=grid_order,
+                                    interpret=True))
+    want = np.asarray(mm2im_tconv(x, w, stride=2, block_oh=block_oh,
+                                  block_oc=block_oc, grid_order=grid_order,
+                                  interpret=True))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
+def test_int8_int32_parity_both_variants(method):
+    """int8 x int8 -> int32 accumulation: bit-exact vs kernels/ref.py for
+    both registry variants, through the registry-dispatched ops.tconv."""
+    rng = np.random.default_rng(3)
+    xq = rng.integers(-128, 128, (2, 6, 6, 16), dtype=np.int8)
+    wq = rng.integers(-128, 128, (5, 5, 8, 16), dtype=np.int8)
+    bq = rng.integers(-1000, 1000, (8,), dtype=np.int32)
+    got = np.asarray(tconv(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(bq),
+                           stride=2, method=method))
+    want = np.asarray(ref.iom_reference_int8(xq, wq, bq, stride=2))
+    assert (got == want).all()
+    assert got.dtype == np.int32
+
+
+def test_int8_requant_through_db_plan():
+    """tconv_int8 honors a plan pinning the double-buffered variant and
+    still requantizes bit-exactly (int8 out)."""
+    rng = np.random.default_rng(4)
+    xq = rng.integers(-128, 128, (1, 6, 6, 8), dtype=np.int8)
+    wq = rng.integers(-128, 128, (3, 3, 4, 8), dtype=np.int8)
+    bq = rng.integers(-500, 500, (4,), dtype=np.int32)
+    plan = Plan(4, 4, "bcj", "mm2im_db")
+    got = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=2, plan=plan))
+    acc = ref.iom_reference_int8(xq, wq, bq, stride=2)
+    want = np.asarray(ref.requantize(acc, 0.003))
+    assert (got == want).all()
+    assert got.dtype == np.int8
+
+
+def test_db_fused_epilogue():
+    x, w = rand_problem(4, 4, 8, 3, 4)
+    b = RNG.standard_normal(4).astype(np.float32)
+    got = np.asarray(mm2im_db_tconv(x, w, jnp.asarray(b), stride=2,
+                                    activation="relu", interpret=True))
+    want = np.maximum(np.asarray(ref.tconv_lax(x, w, stride=2)) + b, 0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_db_registered_and_plan_dispatch():
+    """'mm2im_db' is a registered plan-capable method, and a Plan carrying
+    method='mm2im_db' upgrades default dispatch to it."""
+    assert "mm2im_db" in registry.names()
+    spec = registry.get("mm2im_db")
+    assert spec.supports_plan and spec.fuses_bias and spec.fuses_activation
+
+    x, w = rand_problem(6, 6, 8, 5, 6)
+    want = np.asarray(tconv(x, w, stride=2, method="mm2im"))
+    # Explicit method request.
+    got = np.asarray(tconv(x, w, stride=2, method="mm2im_db"))
+    assert (got == want).all()
+    # Variant selection via the plan (default method stays 'mm2im').
+    got = np.asarray(tconv(x, w, stride=2,
+                           plan=Plan(2, 6, "bcj", "mm2im_db")))
+    want_geom = np.asarray(tconv(x, w, stride=2, plan=Plan(2, 6, "bcj")))
+    np.testing.assert_allclose(got, want_geom, rtol=1e-4, atol=1e-4)
+
+
+def test_db_gradients_match_reference():
+    """Training runs through the db variant too (custom_vjp)."""
+    x, w = rand_problem(5, 5, 6, 3, 4)
+    b = np.zeros((4,), np.float32)
+
+    def loss_kernel(xx, ww, bb):
+        return jnp.sum(tconv(xx, ww, bb, stride=2, method="mm2im_db") ** 2)
+
+    def loss_ref(xx, ww, bb):
+        y = ref.tconv_direct(xx, ww, stride=2) + bb[None, None, None]
+        return jnp.sum(y ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_db_bad_pipeline_rejected():
+    x, w = rand_problem(4, 4, 2, 3, 2)
+    with pytest.raises(ValueError, match="pipeline"):
+        mm2im_db_tconv(x, w, stride=2, interpret=True, pipeline="bogus")

@@ -122,6 +122,15 @@ def test_plan_tuple_normalization():
         Plan(2, 4, "zzz")
 
 
+def test_plan_method_json_roundtrip():
+    """Plan.method survives the cache JSON format; legacy entries (no
+    'method' key) read back as method=None."""
+    p = Plan(4, 8, "cbj", "mm2im_db")
+    assert Plan.from_json(p.to_json()) == p
+    assert "method" not in Plan(4, 8).to_json()  # legacy-shaped output
+    assert Plan.from_json({"block_oh": 4, "block_oc": 8}) == Plan(4, 8)
+
+
 def test_explicit_plan_through_tconv_matches_default():
     x, w = _xw(ih=6, iw=6, ic=8, ks=5, oc=6)
     want = np.asarray(tconv(x, w, stride=2))
@@ -146,6 +155,21 @@ def test_cache_roundtrip_across_instances(tmp_path):
     assert c2.get_entry("some:key")["us"] == 12.5
     assert c2.get("missing") is None
     assert len(c2) == 1
+
+
+def test_cache_sees_external_writes(tmp_path):
+    """A long-lived PlanCache re-reads the file when another instance (or
+    process) writes it — the same-process tune-then-consume path."""
+    import os
+
+    path = tmp_path / "cache.json"
+    long_lived = PlanCache(path)
+    assert long_lived.get("k") is None  # primes the (empty) memo
+    writer = PlanCache(path)
+    writer.put("k", Plan(4, 8))
+    # Force a distinct mtime even on coarse-mtime filesystems.
+    os.utime(path, ns=(1, 1))
+    assert long_lived.get("k") == Plan(4, 8)
 
 
 def test_cache_tolerates_corruption(tmp_path):
@@ -205,6 +229,149 @@ def test_measure_plan_returns_positive_time():
     p = TConvProblem(3, 3, 2, 3, 2, 1)
     us = measure_plan(p, Plan(1, 2), repeats=1, warmup=1)
     assert us > 0
+
+
+# ---------------------------------------------------------------------------
+# Automatic plan-cache consumption (no explicit plans= anywhere)
+# ---------------------------------------------------------------------------
+
+
+def _fresh_autoload(monkeypatch, tmp_path):
+    """Point auto-consumption at an empty tmp cache and reset memos."""
+    from repro.core import autotune
+    from repro.kernels import ops
+
+    path = tmp_path / "auto_cache.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    monkeypatch.delenv(ops.AUTOLOAD_ENV, raising=False)
+    autotune.reset_shared_caches()
+    ops.clear_consumed_plans()
+    return autotune.PlanCache(path)
+
+
+def test_tconv_layer_consumes_cached_plan(monkeypatch, tmp_path):
+    """Write a plan to a tmp cache -> tconv_layer picks it up with no
+    plan= argument, including the tuned kernel-variant preference.
+
+    Shapes here are unique within the test session: ops.tconv's jit cache
+    is keyed by shapes + static args, so a shape compiled before the cache
+    entry existed would (correctly) not retrace.
+    """
+    import jax
+
+    from repro.core.autotune import cache_key
+    from repro.core.maps import TConvProblem
+    from repro.kernels import ops
+
+    cache = _fresh_autoload(monkeypatch, tmp_path)
+    ih, iw, ic, ks, oc, s = 7, 5, 2, 3, 3, 2
+    p = TConvProblem(ih, iw, ic, ks, oc, s)
+    plan = Plan(4, 3, "bcj", "mm2im_db")
+    key = cache_key(p, dtype=jnp.float32, batch=1)
+    cache.put(key, plan)
+
+    params, _ = layers_common.init_tconv(jax.random.PRNGKey(0), ks, oc, ic)
+    x = RNG.standard_normal((1, ih, iw, ic)).astype(np.float32)
+    got = np.asarray(layers_common.tconv_layer(params, x, stride=s))
+    want = np.asarray(
+        ref.tconv_lax(x, np.asarray(params["w"]), stride=s)
+        + np.asarray(params["b"]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    consumed = ops.consumed_plans()
+    assert consumed and consumed[-1] == (key, plan), consumed
+
+
+def test_autoload_disabled_by_env(monkeypatch, tmp_path):
+    from repro.core.autotune import cache_key
+    from repro.core.maps import TConvProblem
+    from repro.kernels import ops
+    from repro.kernels.ops import tconv
+
+    cache = _fresh_autoload(monkeypatch, tmp_path)
+    p = TConvProblem(7, 3, 2, 3, 3, 2)
+    cache.put(cache_key(p, dtype=jnp.float32, batch=1), Plan(2, 3, "bcj"))
+    monkeypatch.setenv(ops.AUTOLOAD_ENV, "0")
+
+    x = RNG.standard_normal((1, 7, 3, 2)).astype(np.float32)
+    w = (RNG.standard_normal((3, 3, 3, 2)) * 0.1).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=2))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=2)), rtol=1e-4, atol=1e-4)
+    assert not ops.consumed_plans()
+
+
+def test_gan_step_builders_consume_cache(monkeypatch, tmp_path):
+    """runtime/steps resolves per-layer cached plans with no plans= arg;
+    explicit entries take precedence over cache hits."""
+    import jax
+
+    from repro.core.autotune import cache_key
+    from repro.models import gan
+    from repro.runtime import steps
+
+    cache = _fresh_autoload(monkeypatch, tmp_path)
+    gp, _ = gan.init_dcgan_g(jax.random.PRNGKey(1), scale_down=64)
+    probs = gan.dcgan_tconv_problems(gp)
+    t1_plan = Plan(2, 4, "bcj", "mm2im_db")
+    t2_plan = Plan(4, 2, "cbj")
+    cache.put(cache_key(probs["t1"], dtype=jnp.float32, batch=3), t1_plan)
+    cache.put(cache_key(probs["t2"], dtype=jnp.float32, batch=3), t2_plan)
+
+    resolved = steps.resolve_gan_plans(gp, batch=3)
+    assert resolved == {"t1": t1_plan, "t2": t2_plan}
+    # Explicit plans= beats the cache (precedence contract).
+    override = Plan(2, 2, "bcj")
+    resolved = steps.resolve_gan_plans(gp, batch=3, plans={"t1": override})
+    assert resolved["t1"] == override and resolved["t2"] == t2_plan
+    # Builders accept the resolved mapping end-to-end (trace only).
+    bundle = steps.make_gan_sample_step(gp, batch=3)
+    assert bundle.kind == "gan_sample"
+
+
+def test_plan_free_methods_ignore_cache(monkeypatch, tmp_path):
+    """A populated cache must not break plan-incapable methods: the GAN
+    builders skip resolution for them, and an unregistered plan.method in
+    the cache degrades to the default kernel instead of raising."""
+    import jax
+
+    from repro.core.autotune import cache_key
+    from repro.core.maps import TConvProblem
+    from repro.models import gan
+    from repro.runtime import steps
+
+    cache = _fresh_autoload(monkeypatch, tmp_path)
+    gp, _ = gan.init_dcgan_g(jax.random.PRNGKey(2), scale_down=64)
+    for prob in gan.dcgan_tconv_problems(gp).values():
+        cache.put(cache_key(prob, dtype=jnp.float32, batch=2), Plan(2, 2))
+    # method='lax' cannot take plans; the builder must not hand it any.
+    bundle = steps.make_gan_sample_step(gp, batch=2, method="lax")
+    assert bundle.meta["plans"] == {}
+    z = RNG.standard_normal((2, 100)).astype(np.float32)
+    np.asarray(bundle.fn(gp, z))  # traces + runs without a dispatch error
+
+    # Stale cache entry naming an unregistered variant: default dispatch
+    # keeps the plan's geometry but quietly ignores the method preference.
+    p = TConvProblem(3, 7, 2, 3, 3, 2)
+    cache.put(cache_key(p, dtype=jnp.float32, batch=1),
+              Plan(2, 3, "bcj", "not_a_registered_kernel"))
+    x = RNG.standard_normal((1, 3, 7, 2)).astype(np.float32)
+    w = (RNG.standard_normal((3, 3, 3, 2)) * 0.1).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=2))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=2)), rtol=1e-4, atol=1e-4)
+
+    # Corrupt geometry (block_oh not a stride multiple): the auto-loaded
+    # plan is discarded — heuristic dispatch instead of a ValueError.
+    p_bad = TConvProblem(3, 5, 2, 3, 3, 2)
+    cache.put(cache_key(p_bad, dtype=jnp.float32, batch=1), Plan(3, 3))
+    from repro.kernels import ops
+    ops.clear_consumed_plans()
+    x = RNG.standard_normal((1, 3, 5, 2)).astype(np.float32)
+    w = (RNG.standard_normal((3, 3, 3, 2)) * 0.1).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=2))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=2)), rtol=1e-4, atol=1e-4)
+    assert not ops.consumed_plans()
 
 
 def test_tuned_plan_through_layer_and_model(tmp_path):

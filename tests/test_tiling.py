@@ -108,13 +108,34 @@ def test_candidate_plans_legal_and_include_default(case):
         assert c.block_oh % s == 0 and c.block_oh >= s
         assert 1 <= c.block_oc
         assert c.grid_order in ("bcj", "cbj")
+        assert c.method in ("mm2im", "mm2im_db")
         assert c.vmem_bytes <= budget, c.describe()
-        key = (c.block_oh, c.block_oc, c.grid_order)
+        if c.method == "mm2im_db":
+            # Pipelining needs at least two row blocks to overlap.
+            assert c.n_row_blocks >= 2, c.describe()
+        key = (c.method, c.block_oh, c.block_oc, c.grid_order)
         assert key not in seen, f"duplicate candidate {key}"
         seen.add(key)
     # The heuristic default geometry is in the enumerated space.
     tp = tiling.plan(p)
-    assert (tp.block_oh, tp.block_oc, tp.grid_order) in seen
+    assert (tp.method, tp.block_oh, tp.block_oc, tp.grid_order) in seen
+
+
+def test_candidate_plans_db_variant_coverage():
+    """Problems with >= 2 row blocks enumerate both kernel variants, and
+    the db residency model frees VMEM vs whole-input residency."""
+    p = TConvProblem(16, 16, 32, 3, 16, 1)
+    cands = tiling.candidate_plans(p)
+    methods = {c.method for c in cands}
+    assert methods == {"mm2im", "mm2im_db"}
+    assert (tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im_db")
+            < tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im"))
+    # Geometry-identical pairs differ only in modeled residency.
+    sb = tiling.plan(p, block_oh=4, block_oc=16, grid_order="bcj")
+    db = tiling.plan(p, block_oh=4, block_oc=16, grid_order="bcj",
+                     method="mm2im_db")
+    assert (sb.n_slab, sb.n_row_blocks) == (db.n_slab, db.n_row_blocks)
+    assert db.vmem_bytes < sb.vmem_bytes
 
 
 def test_explicit_plan_override_roundtrip():

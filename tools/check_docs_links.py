@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Docs link-check: fail on dangling intra-repo ``*.md`` references.
+
+Source docstrings and docs cite each other as ``DESIGN.md §2`` /
+``docs/EXPERIMENTS.md §Perf`` / markdown links; PR 1 shipped with
+citations to files that did not exist.  This checker walks the repo's own
+text (``src/``, ``tests/``, ``benchmarks/``, ``examples/``, ``tools/``,
+``docs/`` and the root ``README.md``/``ROADMAP.md``/``CHANGES.md``) and
+verifies that
+
+1. every referenced ``*.md`` file exists — bare names resolve against the
+   referencing file's directory, the repo root, and ``docs/`` (so the
+   conventional ``DESIGN.md §N`` shorthand in docstrings stays legal);
+2. every ``§<section>`` attached to such a reference matches a heading in
+   the resolved file (numeric sections match ``## N.``-style headings,
+   word sections match by name).
+
+Exit code 0 = clean; 1 = dangling references (listed on stderr).  Run
+directly or via CI:
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Files whose md references we own.  PAPER.md / PAPERS.md / SNIPPETS.md /
+# ISSUE.md quote external material (paper text, other repos' code) and are
+# excluded as sources — but stay valid as *targets*.
+SOURCE_GLOBS = [
+    "README.md", "ROADMAP.md", "CHANGES.md",
+    "docs/**/*.md",
+    "src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+    "examples/**/*.py", "tools/**/*.py",
+]
+
+# A *.md path-ish token, optionally followed by section refs:  §2, §2.4,
+# §Perf, §Dry-run/§Roofline ...  The tail is a lookahead so that a second
+# md reference within it is still matched on its own.
+MD_REF = re.compile(r"(?P<path>[\w./-]*\w\.md)(?=(?P<tail>[^\n]{0,60}))")
+SECTION = re.compile(r"§\s*(?P<sec>[\w][\w.-]*)")
+HEADING = re.compile(r"^#{1,6}\s+(?P<text>.+)$", re.MULTILINE)
+
+
+def resolve(path_str: str, src: Path):
+    """Find the referenced md file; None if it does not exist anywhere."""
+    candidates = [
+        src.parent / path_str,
+        REPO / path_str,
+        REPO / "docs" / Path(path_str).name,
+    ]
+    for c in candidates:
+        try:
+            if c.is_file():
+                return c.resolve()
+        except OSError:
+            pass
+    return None
+
+
+def headings(md: Path) -> list:
+    return [m.group("text").strip() for m in HEADING.finditer(md.read_text())]
+
+
+def section_ok(md: Path, sec: str) -> bool:
+    sec = sec.rstrip(".")
+    for h in headings(md):
+        if re.match(r"^\d", sec):
+            # numeric: '2' / '2.4' match '2. Title' / '2.4 Title' headings.
+            if re.match(rf"^§?{re.escape(sec)}(?:[.\s:]|$)", h):
+                return True
+        else:
+            # word: 'Perf' matches a heading containing the word.
+            if re.search(rf"(?:^|\W){re.escape(sec)}(?:\W|$)", h,
+                         re.IGNORECASE):
+                return True
+    return False
+
+
+def main() -> int:
+    sources = []
+    for g in SOURCE_GLOBS:
+        sources.extend(sorted(REPO.glob(g)))
+    errors = []
+    n_refs = 0
+    for src in sources:
+        if "__pycache__" in src.parts:
+            continue
+        text = src.read_text(errors="replace")
+        for m in MD_REF.finditer(text):
+            raw = m.group("path")
+            path_str = raw.lstrip("./")
+            # External URLs: MD_REF can't match ':', so a scheme's '//'
+            # starts the match itself (pre ends with 'scheme:'), or a bare
+            # 'www.' host leads the path.
+            pre = text[max(0, m.start() - 12):m.start()]
+            if (raw.startswith("//") and pre.endswith(":")) \
+                    or "://" in pre or path_str.startswith("www."):
+                continue
+            n_refs += 1
+            rel = src.relative_to(REPO)
+            line = text.count("\n", 0, m.start()) + 1
+            target = resolve(path_str, src)
+            if target is None:
+                errors.append(f"{rel}:{line}: dangling reference to "
+                              f"'{path_str}' (no such file)")
+                continue
+            # Only the text immediately after the name can carry § refs —
+            # and only up to the next md reference, whose § refs are its own.
+            tail = m.group("tail")
+            nxt = MD_REF.search(tail)
+            if nxt:
+                tail = tail[:nxt.start()]
+            for sm in SECTION.finditer(tail):
+                sec = sm.group("sec")
+                if sec in ("N", "Name"):
+                    continue  # schema placeholders, not real sections
+                if not section_ok(target, sec):
+                    errors.append(
+                        f"{rel}:{line}: '{path_str} §{sec}' — no matching "
+                        f"heading in {target.relative_to(REPO)}")
+    if errors:
+        print(f"docs link-check: {len(errors)} dangling reference(s) "
+              f"(of {n_refs} checked):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"docs link-check: OK ({n_refs} references across "
+          f"{len(sources)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
