@@ -36,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs.paper_models import synthetic_sweep
+from repro.configs.paper_models import (TABLE_II, is_small_problem,
+                                        synthetic_sweep)
 from repro.core.autotune import (PlanCache, autotune_result, autotune_sweep,
                                  measure_plan)
 from repro.core.maps import TConvProblem
@@ -48,8 +49,7 @@ from repro.kernels.registry import Plan
 
 def sweep_slice(limit: int = 4) -> list[TConvProblem]:
     """Small members of the 261-config sweep (interpret-mode friendly)."""
-    small = [p for p in synthetic_sweep()
-             if p.ih <= 7 and p.ic <= 64 and p.oc <= 32 and p.ks <= 5]
+    small = [p for p in synthetic_sweep() if is_small_problem(p)]
     # Spread across the filtered list so Ks/S/Ic all vary.
     step = max(len(small) // limit, 1)
     return small[::step][:limit]
@@ -130,6 +130,47 @@ def main() -> None:
              f"key={r.key};plan=oh{r.plan.block_oh}/oc{r.plan.block_oc}"
              f"/{r.plan.grid_order}/{r.plan.method or 'mm2im'};"
              f"from_cache={int(r.from_cache)}")
+
+    # Tier hit-rate: re-run the slice through *automatic* consumption (no
+    # plan= anywhere) and attribute each hit to the precedence tier that
+    # served it — user cache (tuned above), shipped per-backend table
+    # (committed under src/repro/data/plans), or heuristic fallback.
+    from repro.core import autotune, plan_table
+    from repro.kernels import ops
+
+    old_env = os.environ.get(autotune.CACHE_ENV)
+    os.environ[autotune.CACHE_ENV] = cache_path
+    autotune.reset_shared_caches()
+    ops.clear_consumed_plans()
+    try:
+        shipped = plan_table.shipped_table()
+        probe = list(sweep_slice())
+        if shipped is not None and len(shipped):
+            # A committed-table problem the loop above did NOT tune, so the
+            # shipped tier (below the user cache) actually shows up — the
+            # Table II FCN row, which the tune_sweep --small slice ships.
+            probe.append(next(r for r in TABLE_II
+                              if r.name == "FCN").problem)
+        for p in probe:
+            x = rng.standard_normal((1, p.ih, p.iw, p.ic)).astype(np.float32)
+            w = (rng.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+                 ).astype(np.float32)
+            np.asarray(tconv(x, w, stride=p.stride, padding=p.padding))
+        tiers = [t for _, _, t in ops.consumed_plans()]
+        emit("autotune_tier_hits", 0.0,
+             f"probed={len(probe)};"
+             f"user_cache={tiers.count(autotune.TIER_USER_CACHE)};"
+             f"shipped_table={tiers.count(autotune.TIER_SHIPPED)};"
+             f"heuristic={len(probe) - len(tiers)};"
+             f"shipped_backend="
+             f"{shipped.provenance.get('backend') if shipped else None};"
+             f"shipped_entries={len(shipped) if shipped else 0}")
+    finally:
+        if old_env is None:
+            os.environ.pop(autotune.CACHE_ENV, None)
+        else:
+            os.environ[autotune.CACHE_ENV] = old_env
+        autotune.reset_shared_caches()
 
 
 if __name__ == "__main__":

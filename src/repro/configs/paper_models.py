@@ -54,6 +54,16 @@ SWEEP_IC = (32, 64, 128, 256)
 SWEEP_S = (1, 2)
 
 
+def is_small_problem(p: TConvProblem) -> bool:
+    """Interpret-mode-friendly sweep member: small enough that off-TPU
+    Pallas interpret mode tunes it in seconds.  The single definition of
+    the "small-problem slice" used by ``benchmarks/bench_autotune.py``,
+    ``tools/tune_sweep.py --small`` (CI smoke) and the committed
+    ``src/repro/data/plans/cpu.json`` table."""
+    return (p.ih <= 7 and p.iw <= 9 and p.ic <= 64 and p.oc <= 32
+            and p.ks <= 5)
+
+
 def synthetic_sweep() -> Tuple[TConvProblem, ...]:
     """The 261 TCONV problem configurations of Fig. 6/7."""
     probs = []

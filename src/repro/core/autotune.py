@@ -37,17 +37,24 @@ should enumerate it, pass it in that function's ``methods=``.  Tuned plans
 then carry ``Plan.method`` naming the variant and dispatch back to it.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
-``~/.cache/repro/autotune_cache.json``.
+``~/.cache/repro/autotune_cache.json``.  Below the user cache sits the
+read-only **shipped plan table** tier (``core/plan_table.py`` — tables
+committed under ``src/repro/data/plans/`` and produced by
+``tools/tune_sweep.py``), so a fresh checkout starts from the full-sweep
+tuning shipped with the package; full precedence is ``plan=`` > user
+cache > shipped table > heuristic.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
+import math
 import os
 import time
 from pathlib import Path
-from typing import Dict, Iterable, Optional, Sequence, Union
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -92,13 +99,36 @@ def cache_key(p: TConvProblem, *, dtype=jnp.float32, hw: HW = V5E,
             f":s{p.stride}:{p.padding}|{dt}|{hw.name}|b{batch}")
 
 
+@contextlib.contextmanager
+def _file_lock(path: Path):
+    """Advisory lock serializing a read-merge-replace window on ``path``.
+
+    Best effort: POSIX ``flock`` on a ``.lock`` sidecar; a no-op where
+    ``fcntl`` is unavailable (non-POSIX), falling back to atomic-replace
+    semantics only.
+    """
+    try:
+        import fcntl
+    except ImportError:  # non-POSIX: atomic os.replace is all we have
+        yield
+        return
+    with open(path.with_name(path.name + ".lock"), "w") as f:
+        fcntl.flock(f, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f, fcntl.LOCK_UN)
+
+
 class PlanCache:
     """On-disk JSON store of tuned plans; safe to share across processes.
 
     The file holds ``{"version": 1, "entries": {key: {"plan": {...},
-    "us": ..., ...}}}``.  Writes are atomic (tmp file + ``os.replace``);
-    a corrupt or version-mismatched file is treated as empty rather than
-    raising, so a bad cache can never break inference.
+    "us": ..., ...}}}``.  Writes are atomic (tmp file + ``os.replace``)
+    and merge with the current on-disk entries under an advisory file
+    lock, so concurrent tuners sharing one cache lose no keys; a corrupt
+    or version-mismatched file is treated as empty rather than raising,
+    so a bad cache can never break inference.
     """
 
     def __init__(self, path: Union[str, Path, None] = None):
@@ -114,6 +144,16 @@ class PlanCache:
         except OSError:
             return None
 
+    def _read_disk(self) -> dict:
+        """Fresh parse of the on-disk entries — no memo, no mtime check."""
+        try:
+            raw = json.loads(self.path.read_text())
+            if raw.get("version") == _CACHE_VERSION:
+                return dict(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        return {}
+
     def _load(self) -> dict:
         # Re-read when the file changed on disk (another PlanCache instance
         # or another process tuned since) — one stat() per lookup, so the
@@ -122,23 +162,36 @@ class PlanCache:
         mtime = self._mtime()
         if self._entries is None or mtime != self._loaded_mtime:
             self._loaded_mtime = mtime
-            try:
-                raw = json.loads(self.path.read_text())
-                if raw.get("version") == _CACHE_VERSION:
-                    self._entries = dict(raw.get("entries", {}))
-                else:
-                    self._entries = {}
-            except (OSError, ValueError):
-                self._entries = {}
+            self._entries = self._read_disk()
         return self._entries
 
-    def _save(self) -> None:
+    def _save(self, dirty: dict) -> None:
+        # Merge only the keys *this write actually changed* over the
+        # current on-disk entries: another process may have tuned other
+        # keys (or re-tuned ones we merely hold memoized) between our last
+        # _load() and now, and replaying our whole memo would clobber
+        # them.  Last writer wins per key, not per file.  The advisory
+        # lock serializes the read-merge-replace window itself (two
+        # unserialized merges could each miss the other's key); os.replace
+        # additionally keeps the swap atomic for lock-less readers and
+        # non-POSIX writers.
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
-        tmp.write_text(json.dumps(
-            {"version": _CACHE_VERSION, "entries": self._load()}, indent=1,
-            sort_keys=True))
-        os.replace(tmp, self.path)
+        with _file_lock(self.path):
+            merged = self._read_disk()
+            merged.update(dirty)
+            self._entries = merged
+            tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
+            tmp.write_text(json.dumps(
+                {"version": _CACHE_VERSION, "entries": merged}, indent=1,
+                sort_keys=True))
+            # Record the *tmp* file's mtime (os.replace preserves it as
+            # the destination's): statting self.path after the replace
+            # would race a concurrent writer landing in between,
+            # permanently memoizing our entries under *their* mtime and
+            # hiding their keys.
+            tmp_mtime = tmp.stat().st_mtime_ns
+            os.replace(tmp, self.path)
+            self._loaded_mtime = tmp_mtime
 
     # -- API ----------------------------------------------------------------
 
@@ -154,8 +207,7 @@ class PlanCache:
         entry = {"plan": plan.to_json(), "created": time.time()}
         if meta:
             entry.update(meta)
-        self._load()[key] = entry
-        self._save()
+        self._save({key: entry})
 
     def keys(self) -> Sequence[str]:
         return tuple(self._load())
@@ -179,6 +231,15 @@ class TuningResult:
 
     @property
     def speedup_vs_default(self) -> float:
+        """Tuned-vs-heuristic ratio; NaN when either time is unknown.
+
+        Cache-hit results replayed from an entry that never recorded
+        timings (e.g. imported from a shipped table) have ``us`` /
+        ``default_us`` of NaN — reporting 0.0 here would read as a 0x
+        slowdown, so "unknown" stays unknown.
+        """
+        if math.isnan(self.us) or math.isnan(self.default_us):
+            return float("nan")
         return self.default_us / max(self.us, 1e-9)
 
 
@@ -193,21 +254,41 @@ def _rand_inputs(p: TConvProblem, batch: int, dtype):
     return jnp.asarray(x), jnp.asarray(w)
 
 
+def measure_epilogue(p: TConvProblem, dtype) -> tuple:
+    """Representative ``(bias, out_scale)`` for timing one candidate.
+
+    Integer dtypes get a per-tensor requant scale and an int32 bias so the
+    measured program includes the PPU epilogue (int32 accum -> requant ->
+    int8 store) that ``ops.tconv_int8`` will actually run; without them
+    the tuner would rank int8 plans on an int32-output kernel — a
+    different program with different store traffic.  Float dtypes keep
+    the plain no-epilogue forward (bias/activation fusion costs are
+    epilogue-invariant across plans there).
+    """
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        rng = np.random.default_rng(1)
+        bias = jnp.asarray(rng.integers(-8, 8, (p.oc,)), jnp.int32)
+        return bias, 0.05
+    return None, None
+
+
 def measure_plan(p: TConvProblem, plan: Plan, *, batch: int = 1,
                  dtype=jnp.float32, repeats: int = 3,
                  warmup: int = 1) -> float:
     """Median wall-time (us) of the plan's kernel variant under the plan.
 
     ``plan.method`` selects the entry point from :data:`KERNEL_RUNNERS`
-    (``None`` means the single-buffered default).
+    (``None`` means the single-buffered default).  Integer dtypes are
+    timed with the requant epilogue attached (:func:`measure_epilogue`).
     """
     x, w = _rand_inputs(p, batch, dtype)
     kernel = KERNEL_RUNNERS[plan.method or "mm2im"]
+    bias, out_scale = measure_epilogue(p, dtype)
 
     fn = jax.jit(lambda xx, ww: kernel(
-        xx, ww, stride=p.stride, padding=p.padding,
+        xx, ww, bias, stride=p.stride, padding=p.padding,
         block_oh=plan.block_oh, block_oc=plan.block_oc,
-        grid_order=plan.grid_order))
+        grid_order=plan.grid_order, out_scale=out_scale))
     for _ in range(warmup):
         jax.block_until_ready(fn(x, w))
     ts = []
@@ -253,10 +334,13 @@ def autotune_result(
     if not force:
         hit = cache.get_entry(key)
         if hit is not None:
+            # Entries without timings (imported/hand-written) report NaN,
+            # not 0.0 — speedup_vs_default then stays NaN instead of
+            # masquerading as a 0x slowdown.
             return TuningResult(
                 key=key, plan=Plan.from_json(hit["plan"]),
-                us=float(hit.get("us", 0.0)), default_plan=dflt,
-                default_us=float(hit.get("default_us", 0.0)),
+                us=float(hit.get("us", float("nan"))), default_plan=dflt,
+                default_us=float(hit.get("default_us", float("nan"))),
                 n_candidates=int(hit.get("n_candidates", 0)),
                 n_measured=0, from_cache=True)
 
@@ -291,7 +375,12 @@ def autotune_result(
     cache.put(key, winner, meta={
         "us": result.us, "default_us": result.default_us,
         "default_plan": dflt.to_json(), "n_candidates": result.n_candidates,
-        "backend": jax.default_backend(),
+        # Measurement conditions, per entry — tools/tune_sweep.py --export
+        # derives a table's provenance from these rather than trusting
+        # whatever flags the (possibly later, possibly different) export
+        # invocation happened to use.
+        "backend": jax.default_backend(), "repeats": repeats,
+        "jax": jax.__version__,
     })
     return result
 
@@ -327,19 +416,47 @@ def reset_shared_caches() -> None:
     _SHARED_CACHES.clear()
 
 
+# Tier names recorded by kernels.ops.consumed_plans() — who served a hit.
+TIER_USER_CACHE = "user-cache"
+TIER_SHIPPED = "shipped-table"
+
+
+def lookup_plan(p: TConvProblem, *, dtype=jnp.float32, batch: int = 1,
+                hw: HW = V5E,
+                cache: Union[PlanCache, str, Path, None] = None
+                ) -> Optional[Tuple[Plan, str]]:
+    """Tuned ``(plan, tier)`` for ``p``, or None; never measures.
+
+    This is the lookup behind automatic plan consumption (``ops.tconv``
+    with no ``plan=``).  Precedence within the read path: the user's
+    on-disk cache (:data:`TIER_USER_CACHE`) beats the shipped per-backend
+    table (:data:`TIER_SHIPPED`, ``core/plan_table.py``); a miss in both
+    returns None and the caller falls back to the ``plan_blocks``
+    heuristic.  A pure read either way.
+    """
+    if not isinstance(cache, PlanCache):
+        cache = shared_cache(cache)
+    key = cache_key(p, dtype=dtype, hw=hw, batch=batch)
+    plan = cache.get(key)
+    if plan is not None:
+        return plan, TIER_USER_CACHE
+    from repro.core.plan_table import shipped_table
+
+    table = shipped_table()
+    if table is not None:
+        plan = table.get(key)
+        if plan is not None:
+            return plan, TIER_SHIPPED
+    return None
+
+
 def cached_plan(p: TConvProblem, *, dtype=jnp.float32, batch: int = 1,
                 hw: HW = V5E,
                 cache: Union[PlanCache, str, Path, None] = None
                 ) -> Optional[Plan]:
-    """Tuned plan for ``p`` if the on-disk cache has one; never measures.
-
-    This is the lookup behind automatic plan consumption
-    (``ops.tconv`` with no ``plan=``): a pure read — a miss returns None
-    and the caller falls back to the ``plan_blocks`` heuristic.
-    """
-    if not isinstance(cache, PlanCache):
-        cache = shared_cache(cache)
-    return cache.get(cache_key(p, dtype=dtype, hw=hw, batch=batch))
+    """Tuned plan for ``p`` from any read tier (:func:`lookup_plan`)."""
+    hit = lookup_plan(p, dtype=dtype, batch=batch, hw=hw, cache=cache)
+    return hit[0] if hit else None
 
 
 def autotune_sweep(

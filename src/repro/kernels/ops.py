@@ -22,12 +22,14 @@ a plan carrying ``method='mm2im_db'`` upgrades the default dispatch to the
 variant it was tuned for.  Methods that don't tile reject explicit plans.
 
 **Automatic plan consumption** (docs/AUTOTUNER.md): when no ``plan=`` is
-given and the method supports plans, the dispatcher looks up the on-disk
-autotuner cache by problem key — shapes, dtype, batch — at trace time.
-Precedence: explicit ``plan=`` > cache hit > ``plan_blocks`` heuristic.
-Disable with ``REPRO_AUTOTUNE_AUTOLOAD=0``.  The lookup happens once per
-jit trace, so a cache written *after* a shape was first compiled is only
-seen by new traces.
+given and the method supports plans, the dispatcher looks up the tuned
+plan by problem key — shapes, dtype, batch — at trace time.  Precedence:
+explicit ``plan=`` > user cache hit > shipped per-backend plan table
+(``core/plan_table.py``) > ``plan_blocks`` heuristic; ``consumed_plans()``
+records which tier served each hit.  Disable with
+``REPRO_AUTOTUNE_AUTOLOAD=0``.  The lookup happens once per jit trace, so
+a cache written *after* a shape was first compiled is only seen by new
+traces.
 
 Training support: the Pallas forwards are wrapped in ``jax.custom_vjp``
 whose backward pass is the (automatically derived) VJP of the
@@ -88,7 +90,9 @@ def _make_mm2im_diff(kernel_fn):
             g = g * (1.0 - out * out)
         elif activation == "leaky_relu":
             g = g * jnp.where(out >= 0, 1.0, 0.2)
-        bias0 = jnp.zeros((w.shape[2],), jnp.float32) if bias is None else bias
+        # Zero-bias placeholder in the *weight* dtype: an f32 constant here
+        # silently promotes the replayed bf16 forward to f32.
+        bias0 = jnp.zeros((w.shape[2],), w.dtype) if bias is None else bias
         _, vjp = jax.vjp(
             lambda xx, ww, bb: _fwd_math(xx, ww, bb, stride=stride,
                                          padding=padding),
@@ -152,14 +156,17 @@ def _lax_impl(x, w, bias, *, stride, padding, activation, plan):
 
 AUTOLOAD_ENV = "REPRO_AUTOTUNE_AUTOLOAD"
 
-# Ring of (cache_key, Plan) pairs auto-consumed by tconv/tconv_int8 —
-# observability for tests and debugging (appends happen at trace time).
+# Ring of (cache_key, Plan, tier) triples auto-consumed by tconv/tconv_int8
+# — observability for tests and debugging (appends happen at trace time).
+# tier is which precedence tier served the hit: autotune.TIER_USER_CACHE
+# (the on-disk user cache) or autotune.TIER_SHIPPED (a committed
+# per-backend table from core/plan_table.py).
 _CONSUMED: list = []
 _CONSUMED_CAP = 64
 
 
 def consumed_plans() -> tuple:
-    """(cache_key, Plan) pairs auto-consumed so far, oldest first."""
+    """(cache_key, Plan, tier) triples auto-consumed so far, oldest first."""
     return tuple(_CONSUMED)
 
 
@@ -181,21 +188,22 @@ def _auto_plan(x, w, stride: int, padding: str) -> Optional[Plan]:
     if not _autoload_enabled():
         return None
     try:
-        from repro.core.autotune import cached_plan, cache_key
+        from repro.core.autotune import lookup_plan, cache_key
         from repro.core.maps import TConvProblem
 
         b, ih, iw, ic = x.shape
         ks, _, oc, _ = w.shape
         p = TConvProblem(ih, iw, ic, ks, oc, stride, padding)
-        plan = cached_plan(p, dtype=x.dtype, batch=b)
-        if plan is None:
+        hit = lookup_plan(p, dtype=x.dtype, batch=b)
+        if hit is None:
             return None
+        plan, tier = hit
         if plan.block_oh % stride != 0:
             # Corrupt/hand-edited geometry: an auto-loaded plan degrades to
             # the heuristic instead of failing dispatch (explicit plans
             # with the same defect still raise — that's a caller error).
             return None
-        _CONSUMED.append((cache_key(p, dtype=x.dtype, batch=b), plan))
+        _CONSUMED.append((cache_key(p, dtype=x.dtype, batch=b), plan, tier))
         del _CONSUMED[:-_CONSUMED_CAP]
         return plan
     except Exception:
@@ -205,6 +213,19 @@ def _auto_plan(x, w, stride: int, padding: str) -> Optional[Plan]:
 # ---------------------------------------------------------------------------
 # Dispatch.
 # ---------------------------------------------------------------------------
+
+
+def _check_explicit_plan(plan: Plan, stride: int) -> None:
+    """Reject explicit-plan geometry the kernels cannot tile.
+
+    Shared by ``tconv`` and ``tconv_int8`` so both entry points surface
+    the same caller error (auto-loaded plans with these defects are
+    silently discarded by ``_auto_plan`` instead).
+    """
+    if plan.block_oh % stride != 0:
+        raise ValueError(
+            f"plan block_oh={plan.block_oh} must be a multiple of "
+            f"stride {stride}")
 
 
 @functools.partial(
@@ -228,12 +249,9 @@ def tconv(
         raise ValueError(
             f"method {method!r} does not accept an explicit tile plan")
     if plan is None and spec.supports_plan:
-        plan = _auto_plan(x, w, stride, padding)  # cache hit > heuristic
+        plan = _auto_plan(x, w, stride, padding)  # cache > shipped > heur.
     if plan is not None:
-        if plan.block_oh % stride != 0:
-            raise ValueError(
-                f"plan block_oh={plan.block_oh} must be a multiple of "
-                f"stride {stride}")
+        _check_explicit_plan(plan, stride)
         # A plan tuned for a specific kernel variant upgrades the *default*
         # dispatch to that variant; an explicitly requested non-default
         # method wins over the plan's preference (geometry still applies).
@@ -286,6 +304,10 @@ def tconv_int8(
         import numpy as _np
         out_scale = _np.asarray(out_scale, _np.float32)
     plan = registry.as_plan(plan)
+    if plan is not None:
+        # Same contract as tconv: surfaced here rather than as a deeper
+        # kernel block-shape assert.
+        _check_explicit_plan(plan, stride)
     if plan is None:
         plan = _auto_plan(x_q, w_q, stride, padding)
     kernel = mm2im_tconv

@@ -1,0 +1,376 @@
+"""Shipped plan tables (core/plan_table.py) + the four-tier precedence chain.
+
+Covers the ISSUE-3 acceptance surface: schema validation of table files,
+backend-keyed loading with the per-process memo, the committed
+``src/repro/data/plans/`` tables being valid, the full consumption
+precedence (explicit ``plan=`` > user cache > shipped table > heuristic)
+with tier attribution in ``ops.consumed_plans()``, and the
+``tools/tune_sweep.py`` CLI's resumability (zero re-measurements on
+re-run) and export workflow.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import plan_table
+from repro.core.autotune import (TIER_SHIPPED, TIER_USER_CACHE, PlanCache,
+                                 cache_key, cached_plan, lookup_plan)
+from repro.core.maps import TConvProblem
+from repro.kernels import ref
+from repro.kernels.registry import Plan
+
+RNG = np.random.default_rng(11)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _table_dict(entries: dict, backend: str = "cpu") -> dict:
+    return {
+        "version": plan_table.TABLE_VERSION,
+        "provenance": {"backend": backend, "jax": "0.4.37", "repeats": 2,
+                       "created": 1754000000.0, "note": "test"},
+        "entries": entries,
+    }
+
+
+def _entry(plan: Plan, **meta) -> dict:
+    return {"plan": plan.to_json(), **meta}
+
+
+def _write_table(d: Path, backend: str, table: dict) -> Path:
+    d.mkdir(parents=True, exist_ok=True)
+    path = d / f"{backend}.json"
+    path.write_text(json.dumps(table))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Schema validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_accepts_wellformed_table():
+    t = _table_dict({
+        "tconv:ih4:iw4:ic8:ks3:oc4:s2:SAME|float32|tpu-v5e|b1":
+            _entry(Plan(2, 4, "cbj", "mm2im_db"), us=12.5, default_us=20.0),
+    })
+    assert plan_table.validate_table_json(t) == []
+
+
+@pytest.mark.parametrize("mutate,expect", [
+    (lambda t: t.update(version=99), "version"),
+    (lambda t: t.pop("provenance"), "provenance"),
+    (lambda t: t["provenance"].pop("backend"), "backend"),
+    (lambda t: t["provenance"].pop("created"), "created"),
+    (lambda t: t.pop("entries"), "entries"),
+])
+def test_validate_rejects_structural_defects(mutate, expect):
+    t = _table_dict({})
+    mutate(t)
+    errs = plan_table.validate_table_json(t)
+    assert errs and any(expect in e for e in errs), errs
+
+
+def test_validate_rejects_bad_entries():
+    key = "tconv:ih4:iw4:ic8:ks3:oc4:s2:SAME|float32|tpu-v5e|b1"
+    bad = _table_dict({
+        "not-a-key": _entry(Plan(2, 4)),                       # malformed key
+        key: {"us": 1.0},                                      # no plan
+        key + "x": _entry(Plan(2, 4), us="fast"),              # us not numeric
+    })
+    bad["entries"]["tconv:ih1:iw1:ic1:ks1:oc1:s1:SAME|int8|hw|b1"] = {
+        "plan": {"block_oh": 0, "block_oc": 4}}                # illegal plan
+    errs = plan_table.validate_table_json(bad)
+    assert len(errs) >= 4, errs
+    assert plan_table.validate_table_json([1, 2]), "non-dict must fail"
+
+
+def test_load_table_lenient_vs_strict(tmp_path):
+    # Absent file: lenient None, strict raises.
+    assert plan_table.load_table("cpu", directory=tmp_path) is None
+    with pytest.raises(ValueError, match="no shipped table"):
+        plan_table.load_table("cpu", directory=tmp_path, strict=True)
+    # Corrupt JSON: lenient None, strict raises.
+    (tmp_path / "cpu.json").write_text("{nope")
+    assert plan_table.load_table("cpu", directory=tmp_path) is None
+    with pytest.raises(ValueError, match="not valid JSON"):
+        plan_table.load_table("cpu", directory=tmp_path, strict=True)
+    # Schema-invalid: lenient None, strict raises with the report.
+    (tmp_path / "cpu.json").write_text(json.dumps({"version": 1}))
+    assert plan_table.load_table("cpu", directory=tmp_path) is None
+    with pytest.raises(ValueError, match="invalid shipped plan table"):
+        plan_table.load_table("cpu", directory=tmp_path, strict=True)
+
+
+def test_shipped_table_backend_keying_and_memo(monkeypatch, tmp_path):
+    key = "tconv:ih4:iw4:ic8:ks3:oc4:s2:SAME|float32|tpu-v5e|b1"
+    _write_table(tmp_path, "cpu", _table_dict({key: _entry(Plan(2, 4))},
+                                              "cpu"))
+    _write_table(tmp_path, "tpu", _table_dict({key: _entry(Plan(4, 4))},
+                                              "tpu"))
+    monkeypatch.setenv(plan_table.TABLE_DIR_ENV, str(tmp_path))
+    plan_table.reset_shipped_tables()
+    assert plan_table.available_backends() == ("cpu", "tpu")
+    assert plan_table.shipped_table("cpu").get(key) == Plan(2, 4)
+    assert plan_table.shipped_table("tpu").get(key) == Plan(4, 4)
+    assert plan_table.shipped_table("rocm") is None
+    # Memoized: deleting the file does not drop an already-loaded table...
+    (tmp_path / "cpu.json").unlink()
+    assert plan_table.shipped_table("cpu") is not None
+    # ...until the memo is reset.
+    plan_table.reset_shipped_tables()
+    assert plan_table.shipped_table("cpu") is None
+
+
+def test_committed_tables_are_valid(monkeypatch):
+    """Every table committed under src/repro/data/plans/ passes strict
+    validation, and the cpu one is present and non-trivial (that is what
+    lets CI exercise the shipped tier end-to-end)."""
+    monkeypatch.delenv(plan_table.TABLE_DIR_ENV, raising=False)
+    plan_table.reset_shipped_tables()
+    d = plan_table.table_dir()
+    backends = plan_table.available_backends(d)
+    assert "cpu" in backends, f"no committed cpu table under {d}"
+    for backend in backends:
+        t = plan_table.load_table(backend, directory=d, strict=True)
+        assert t.provenance["backend"] == backend
+        assert len(t) > 0
+    cpu = plan_table.load_table("cpu", directory=d, strict=True)
+    assert len(cpu) >= 10
+    # int8 (the paper's precision) and batch>1 coverage shipped too.
+    assert any("|int8|" in k for k in cpu.keys())
+    assert any(k.endswith("|b8") for k in cpu.keys())
+
+
+# ---------------------------------------------------------------------------
+# Four-tier precedence: explicit > user cache > shipped table > heuristic
+# ---------------------------------------------------------------------------
+
+
+def _isolated_tiers(monkeypatch, tmp_path):
+    """Empty user cache + empty shipped-table dir, memos reset."""
+    from repro.core import autotune
+    from repro.kernels import ops
+
+    cache_path = tmp_path / "user_cache.json"
+    table_dir = tmp_path / "plans"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(cache_path))
+    monkeypatch.setenv(plan_table.TABLE_DIR_ENV, str(table_dir))
+    monkeypatch.delenv(ops.AUTOLOAD_ENV, raising=False)
+    autotune.reset_shared_caches()
+    plan_table.reset_shipped_tables()
+    ops.clear_consumed_plans()
+    return PlanCache(cache_path), table_dir
+
+
+def test_lookup_plan_tier_order(monkeypatch, tmp_path):
+    """lookup_plan: user cache beats shipped table; either beats nothing."""
+    cache, table_dir = _isolated_tiers(monkeypatch, tmp_path)
+    p = TConvProblem(6, 6, 8, 3, 6, 2)
+    key = cache_key(p)
+
+    assert lookup_plan(p) is None
+    assert cached_plan(p) is None
+
+    shipped = Plan(2, 6, "cbj")
+    _write_table(table_dir, "cpu",
+                 _table_dict({key: _entry(shipped, us=9.0)}))
+    plan_table.reset_shipped_tables()
+    assert lookup_plan(p) == (shipped, TIER_SHIPPED)
+    assert cached_plan(p) == shipped
+
+    user = Plan(4, 6, "bcj")
+    cache.put(key, user)
+    assert lookup_plan(p) == (user, TIER_USER_CACHE)
+    assert cached_plan(p) == user
+
+
+def test_four_tier_precedence_through_tconv(monkeypatch, tmp_path):
+    """The acceptance chain, end-to-end through ops.tconv dispatch with
+    tier attribution in consumed_plans().  Distinct problem shapes per
+    tier (ops.tconv's jit cache is keyed by shapes, so a shape traced
+    under one tier would not re-trace under another)."""
+    from repro.kernels import ops
+    from repro.kernels.ops import tconv
+
+    cache, table_dir = _isolated_tiers(monkeypatch, tmp_path)
+
+    p_ship = TConvProblem(9, 7, 3, 3, 5, 2)    # only in the shipped table
+    p_user = TConvProblem(7, 9, 3, 3, 5, 2)    # in both: user cache wins
+    p_heur = TConvProblem(9, 9, 3, 3, 5, 2)    # in neither: heuristic
+    ship_plan = Plan(2, 5, "cbj")
+    user_plan = Plan(4, 5, "bcj")
+    _write_table(table_dir, "cpu", _table_dict({
+        cache_key(p_ship): _entry(ship_plan, us=5.0),
+        cache_key(p_user): _entry(Plan(6, 5, "cbj"), us=7.0),
+    }))
+    plan_table.reset_shipped_tables()
+    cache.put(cache_key(p_user), user_plan)
+
+    def run(p):
+        x = RNG.standard_normal((1, p.ih, p.iw, p.ic)).astype(np.float32)
+        w = (RNG.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+             ).astype(np.float32)
+        got = np.asarray(tconv(x, w, stride=p.stride))
+        np.testing.assert_allclose(
+            got, np.asarray(ref.tconv_lax(x, w, stride=p.stride)),
+            rtol=1e-4, atol=1e-4)
+
+    # Tier 3 — shipped table serves the hit, attributed as such.
+    run(p_ship)
+    assert ops.consumed_plans()[-1] == (cache_key(p_ship), ship_plan,
+                                        TIER_SHIPPED)
+    # Tier 2 — user cache wins over the shipped entry for the same key.
+    run(p_user)
+    assert ops.consumed_plans()[-1] == (cache_key(p_user), user_plan,
+                                        TIER_USER_CACHE)
+    # Tier 4 — no entry anywhere: heuristic, nothing consumed.
+    n = len(ops.consumed_plans())
+    run(p_heur)
+    assert len(ops.consumed_plans()) == n
+    # Tier 1 — explicit plan= skips auto-consumption entirely (and wins
+    # over both stored tiers for a problem present in each).
+    x = RNG.standard_normal((1, p_user.ih, p_user.iw, p_user.ic)
+                            ).astype(np.float32)
+    w = (RNG.standard_normal((p_user.ks, p_user.ks, p_user.oc, p_user.ic))
+         * 0.1).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=p_user.stride, plan=Plan(2, 5)))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=p_user.stride)),
+        rtol=1e-4, atol=1e-4)
+    assert len(ops.consumed_plans()) == n
+
+
+def test_shipped_tier_survives_user_cache_deletion(monkeypatch, tmp_path):
+    """The headline acceptance criterion: REPRO_AUTOTUNE_AUTOLOAD=1, user
+    cache deleted -> a problem in the committed table still runs under its
+    tuned plan, proven by consumed_plans() reporting a shipped-tier hit.
+
+    Uses the *real* committed cpu table (no REPRO_PLAN_TABLE_DIR), with a
+    problem drawn from it at a batch unlikely to be traced elsewhere."""
+    from repro.core import autotune
+    from repro.kernels import ops
+    from repro.kernels.ops import tconv
+
+    monkeypatch.delenv(plan_table.TABLE_DIR_ENV, raising=False)
+    plan_table.reset_shipped_tables()
+    table = plan_table.shipped_table("cpu")
+    assert table is not None and len(table) > 0
+
+    # Deleted (never-created) user cache.
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "gone.json"))
+    monkeypatch.setenv(ops.AUTOLOAD_ENV, "1")
+    autotune.reset_shared_caches()
+    ops.clear_consumed_plans()
+
+    # The FCN Table II row ships in the table (f32, b8): tiny and with a
+    # batch no other test traces.
+    from repro.configs.paper_models import TABLE_II
+
+    p = next(r for r in TABLE_II if r.name == "FCN").problem
+    batch = 8
+    key = cache_key(p, dtype=jnp.float32, batch=batch)
+    want_plan = table.get(key)
+    assert want_plan is not None, f"{key} missing from committed cpu table"
+
+    x = RNG.standard_normal((batch, p.ih, p.iw, p.ic)).astype(np.float32)
+    w = (RNG.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+         ).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=p.stride))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=p.stride)),
+        rtol=1e-4, atol=1e-4)
+    assert (key, want_plan, TIER_SHIPPED) in ops.consumed_plans()
+
+
+# ---------------------------------------------------------------------------
+# tune_sweep CLI: resumability + export (subprocess, real entry point)
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(args, env_extra):
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""),
+               **env_extra)
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "tune_sweep.py"), *args],
+        capture_output=True, text=True, env=env, timeout=600)
+
+
+@pytest.mark.slow
+def test_tune_sweep_cli_resumes_without_remeasuring(tmp_path):
+    cache = tmp_path / "sweep.json"
+    base = ["--filter", "ih1:iw1", "--dtypes", "f32", "--batches", "1",
+            "--repeats", "1", "--max-measure", "2", "--cache", str(cache)]
+    env = {plan_table.TABLE_DIR_ENV: str(tmp_path / "no_tables")}
+
+    first = _run_cli([*base, "--expect-measured", "1"], env)
+    assert first.returncode == 0, first.stdout + first.stderr
+    assert "measured=1" in first.stdout
+
+    # Interrupted-and-rerun: every completed key replays from the cache
+    # with ZERO re-measurements (the acceptance criterion).
+    second = _run_cli([*base, "--expect-measured", "0"], env)
+    assert second.returncode == 0, second.stdout + second.stderr
+    assert "measured=0 skipped=1" in second.stdout
+
+    # And the CLI detects a resumability regression (expectation violated).
+    third = _run_cli([*base, "--expect-measured", "5"], env)
+    assert third.returncode == 2
+
+    # Export promotes the cache into a strict-valid table whose
+    # provenance reflects the *entries'* recorded measurement conditions.
+    out = tmp_path / "tables" / "cpu.json"
+    exp = _run_cli(["--cache", str(cache), "--export", str(out),
+                    "--backend", "cpu"], env)
+    assert exp.returncode == 0, exp.stdout + exp.stderr
+    t = plan_table.load_table("cpu", directory=out.parent, strict=True)
+    assert len(t) == 1 and t.provenance["backend"] == "cpu"
+    assert t.provenance["repeats"] == 1  # from the entry, not the CLI default
+    assert math.isfinite(t.get_entry(t.keys()[0])["us"])
+
+    # Exporting cpu-tuned entries into a table labeled for another
+    # backend is refused (misprovenance guard).
+    bad = _run_cli(["--cache", str(cache), "--export",
+                    str(tmp_path / "tables" / "tpu.json"),
+                    "--backend", "tpu"], env)
+    assert bad.returncode == 2 and "refusing to export" in bad.stdout
+
+
+def test_tune_sweep_work_items_and_problem_space():
+    """The in-process surface: 261 synthetic + Table II rows, filter/limit
+    behave, and the small slice is genuinely interpret-friendly."""
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import tune_sweep
+    finally:
+        sys.path.pop(0)
+    probs = tune_sweep.sweep_problems()
+    assert len(probs) >= 261
+    ns = argparse_ns(tune_sweep, dtypes="f32,int8", batches="1,8",
+                     small=False, filter=None, limit=None)
+    items = tune_sweep.work_items(ns)
+    assert len(items) == len(probs) * 4
+    ns = argparse_ns(tune_sweep, dtypes="f32", batches="1", small=True,
+                     filter="|float32|", limit=5)
+    small = tune_sweep.work_items(ns)
+    assert len(small) == 5
+    for p, dtype, batch, key in small:
+        assert p.ih <= 7 and p.ic <= 64 and "|float32|" in key
+
+
+def argparse_ns(tune_sweep, **overrides):
+    ns = tune_sweep.build_parser().parse_args([])
+    for k, v in overrides.items():
+        setattr(ns, k, v)
+    return ns

@@ -216,6 +216,32 @@ def test_autotune_and_execute_through_ops(tmp_path):
     assert PlanCache(tmp_path / "tune.json").get(res.key) == res.plan
 
 
+def test_tconv_int8_explicit_bad_plan_raises():
+    """tconv_int8 surfaces the same block_oh-vs-stride ValueError as tconv
+    for an explicit plan, instead of deferring to a deeper kernel assert."""
+    from repro.kernels.ops import tconv_int8
+
+    x = RNG.integers(-128, 128, (1, 4, 4, 2)).astype(np.int8)
+    w = RNG.integers(-128, 128, (3, 3, 2, 2)).astype(np.int8)
+    b = np.zeros((2,), np.int32)
+    with pytest.raises(ValueError, match="multiple of"):
+        tconv_int8(x, w, b, 0.05, stride=2, plan=Plan(3, 2))
+
+
+def test_bwd_zero_bias_keeps_weight_dtype():
+    """Gradients through the bias-free MM2IM path must not silently
+    promote bf16 to f32 (regression: bwd hardcoded an f32 zero-bias)."""
+    import jax
+
+    x = jnp.asarray(RNG.standard_normal((1, 4, 4, 2)), jnp.bfloat16)
+    w = jnp.asarray(RNG.standard_normal((3, 3, 2, 2)) * 0.1, jnp.bfloat16)
+    dx, dw = jax.grad(
+        lambda xx, ww: tconv(xx, ww, stride=2).astype(jnp.float32).sum(),
+        argnums=(0, 1))(x, w)
+    assert dx.dtype == jnp.bfloat16 and dx.shape == x.shape
+    assert dw.dtype == jnp.bfloat16 and dw.shape == w.shape
+
+
 def test_default_plan_matches_heuristic():
     p = TConvProblem(8, 8, 16, 5, 12, 2)
     d = default_plan(p)
@@ -231,20 +257,132 @@ def test_measure_plan_returns_positive_time():
     assert us > 0
 
 
+def test_measure_plan_int8_times_requant_epilogue():
+    """int8 candidates must be timed with a representative bias +
+    per-tensor out_scale so the measured program is the int8-output
+    requant kernel tconv_int8 will actually run — not a bare int32-output
+    MatMul (regression: the epilogue was silently dropped)."""
+    from repro.core.autotune import measure_epilogue
+
+    p = TConvProblem(3, 3, 2, 3, 2, 1)
+    bias, out_scale = measure_epilogue(p, jnp.int8)
+    assert bias is not None and bias.shape == (p.oc,)
+    assert bias.dtype == jnp.int32
+    assert isinstance(out_scale, float) and out_scale > 0
+    # Float dtypes keep the epilogue-free forward.
+    assert measure_epilogue(p, jnp.float32) == (None, None)
+    # And the int8 measurement path runs end-to-end through the kernel.
+    us = measure_plan(p, Plan(1, 2), dtype=jnp.int8, repeats=1, warmup=1)
+    assert us > 0
+
+
+def test_cache_save_merges_concurrent_writers(tmp_path):
+    """_save must merge only its dirty keys over current on-disk entries:
+    a writer whose memo predates another process's writes neither drops
+    that process's *new* keys nor reverts its *re-tuned* ones
+    (last-writer-wins per *key*, not per file)."""
+    path = tmp_path / "cache.json"
+    c1 = PlanCache(path)
+    c1.put("k1", Plan(2, 2))
+    # Another process adds k2 AND re-tunes k1 behind c1's back.
+    other = PlanCache(path)
+    other.put("k2", Plan(4, 4))
+    other.put("k1", Plan(16, 16))
+    # Simulate the read-modify-write race: c1's memo is stale (old k1, no
+    # k2) but its recorded mtime matches the file, so _load() trusts the
+    # memo — exactly the state a slow writer is in between load and save.
+    c1._loaded_mtime = c1._mtime()
+    c1._entries = {"k1": {"plan": Plan(2, 2).to_json()}}
+    c1.put("k3", Plan(8, 8))
+    survivors = PlanCache(path)
+    assert survivors.get("k2") == Plan(4, 4), "concurrent new key clobbered"
+    assert survivors.get("k1") == Plan(16, 16), \
+        "stale memo reverted a concurrent re-tune of an untouched key"
+    assert survivors.get("k3") == Plan(8, 8)
+
+
+def test_cache_concurrent_processes_lose_no_keys(tmp_path):
+    """Two real processes writing disjoint keys into one cache file at
+    the same time: the flock-serialized merge in _save keeps every key —
+    the property tune_sweep's zero-re-measurement resumability relies on
+    when shards share a cache."""
+    import os
+    import subprocess
+    import sys
+
+    from pathlib import Path
+
+    path = tmp_path / "cache.json"
+    script = (
+        "import sys\n"
+        "from repro.core.autotune import PlanCache\n"
+        "from repro.kernels.registry import Plan\n"
+        f"c = PlanCache({str(path)!r})\n"
+        "tag = sys.argv[1]\n"
+        "for i in range(15):\n"
+        "    c.put(f'{tag}:{i}', Plan(2, 2))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        str(Path(__file__).resolve().parent.parent / "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    procs = [subprocess.Popen([sys.executable, "-c", script, tag],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE)
+             for tag in ("a", "b")]
+    for pr in procs:
+        out, err = pr.communicate(timeout=300)
+        assert pr.returncode == 0, err.decode()
+    final = PlanCache(path)
+    missing = [f"{t}:{i}" for t in ("a", "b") for i in range(15)
+               if final.get(f"{t}:{i}") is None]
+    assert not missing, f"concurrent writers lost keys: {missing}"
+
+
+def test_cache_hit_without_timings_reports_nan_speedup(tmp_path):
+    """An entry lacking us/default_us (imported table, hand-written) must
+    not report speedup 0.0 — that reads as a 0x slowdown; NaN means
+    'unknown' (regression)."""
+    import math
+
+    from repro.core.autotune import autotune_result, cache_key
+
+    p = TConvProblem(4, 4, 2, 3, 2, 2)
+    cache = PlanCache(tmp_path / "tune.json")
+    cache.put(cache_key(p), Plan(2, 2))  # no us / default_us metadata
+    res = autotune_result(p, cache=cache, max_measure=2, repeats=1)
+    assert res.from_cache
+    assert math.isnan(res.us) and math.isnan(res.default_us)
+    assert math.isnan(res.speedup_vs_default)
+    # Timed entries still report a real ratio.
+    from repro.core.autotune import TuningResult
+    ok = TuningResult(key="k", plan=Plan(2, 2), us=50.0,
+                      default_plan=Plan(2, 2), default_us=100.0,
+                      n_candidates=1, n_measured=1, from_cache=False)
+    assert ok.speedup_vs_default == pytest.approx(2.0)
+
+
 # ---------------------------------------------------------------------------
 # Automatic plan-cache consumption (no explicit plans= anywhere)
 # ---------------------------------------------------------------------------
 
 
 def _fresh_autoload(monkeypatch, tmp_path):
-    """Point auto-consumption at an empty tmp cache and reset memos."""
-    from repro.core import autotune
+    """Point auto-consumption at an empty tmp cache and reset memos.
+
+    Also isolates the shipped-table tier (an empty tmp dir) so the
+    committed ``src/repro/data/plans/`` tables cannot serve these tests'
+    problems behind the user cache's back.
+    """
+    from repro.core import autotune, plan_table
     from repro.kernels import ops
 
     path = tmp_path / "auto_cache.json"
     monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    monkeypatch.setenv(plan_table.TABLE_DIR_ENV, str(tmp_path / "no_plans"))
     monkeypatch.delenv(ops.AUTOLOAD_ENV, raising=False)
     autotune.reset_shared_caches()
+    plan_table.reset_shipped_tables()
     ops.clear_consumed_plans()
     return autotune.PlanCache(path)
 
@@ -278,7 +416,8 @@ def test_tconv_layer_consumes_cached_plan(monkeypatch, tmp_path):
         + np.asarray(params["b"]))
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
     consumed = ops.consumed_plans()
-    assert consumed and consumed[-1] == (key, plan), consumed
+    from repro.core.autotune import TIER_USER_CACHE
+    assert consumed and consumed[-1] == (key, plan, TIER_USER_CACHE), consumed
 
 
 def test_autoload_disabled_by_env(monkeypatch, tmp_path):

@@ -1,0 +1,290 @@
+#!/usr/bin/env python
+"""Resumable full-sweep autotuner harness + shipped-table export.
+
+This is the CLI that turns "tune once per machine" into "tuned out of the
+box": it runs the autotuner (``core/autotune.py``) over the paper's full
+evaluation space — all 261 synthetic sweep configurations
+(``configs/paper_models.synthetic_sweep``) plus the Table II model rows —
+across dtypes and batch sizes, persisting every result to the user plan
+cache *immediately*, and can then promote that cache into a committed
+per-backend plan table (``core/plan_table.py``, files under
+``src/repro/data/plans/``).
+
+Resumability is structural, not checkpoint-file magic: every
+``autotune_result`` call writes its winner to the cache before the next
+key starts, and a cache hit performs **zero** re-measurements — so an
+interrupted run (Ctrl-C, ``--max-seconds``, preemption) simply re-runs
+the same command and skips straight past completed keys.
+
+Typical workflows::
+
+    # Full sweep on the target machine (hours on interpret mode, use TPU):
+    python tools/tune_sweep.py --dtypes f32,int8 --batches 1,8
+
+    # Budgeted slice, resumed across invocations:
+    python tools/tune_sweep.py --max-seconds 600        # ... interrupted
+    python tools/tune_sweep.py --max-seconds 600        # skips done keys
+
+    # Small interpret-friendly slice (what CI smokes and what generated
+    # the committed cpu.json table):
+    python tools/tune_sweep.py --small --repeats 2
+
+    # Promote the tuned cache into a committed table, then commit it:
+    python tools/tune_sweep.py --export src/repro/data/plans/cpu.json
+    python tools/tune_sweep.py --validate-tables
+
+Run with ``PYTHONPATH=src`` from the repo root (see docs/EXPERIMENTS.md
+§Autotune; table format in docs/AUTOTUNER.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import (TABLE_II, is_small_problem,
+                                        synthetic_sweep)
+from repro.core import plan_table
+from repro.core.autotune import (PlanCache, autotune_result, cache_key,
+                                 default_cache_path)
+from repro.core.maps import TConvProblem
+
+_DTYPES = {
+    "f32": jnp.float32,
+    "float32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+}
+
+
+def sweep_problems() -> list[TConvProblem]:
+    """The 261 synthetic configs + Table II model rows, deduplicated."""
+    probs = list(synthetic_sweep())
+    seen = set(probs)
+    for row in TABLE_II:
+        if row.problem not in seen:
+            seen.add(row.problem)
+            probs.append(row.problem)
+    return probs
+
+
+def work_items(args) -> list[tuple[TConvProblem, object, int, str]]:
+    """Ordered (problem, dtype, batch, key) list after filter/small/limit."""
+    dtypes = [_DTYPES[d.strip()] for d in args.dtypes.split(",") if d.strip()]
+    batches = [int(b) for b in args.batches.split(",") if b.strip()]
+    items = []
+    for p in sweep_problems():
+        if args.small and not is_small_problem(p):
+            continue
+        for dtype in dtypes:
+            for batch in batches:
+                key = cache_key(p, dtype=dtype, batch=batch)
+                if args.filter and args.filter not in key:
+                    continue
+                items.append((p, dtype, batch, key))
+    if args.limit is not None:
+        items = items[:args.limit]
+    return items
+
+
+def run_sweep(args) -> int:
+    cache = PlanCache(args.cache)
+    items = work_items(args)
+    if args.list:
+        for _, _, _, key in items:
+            print(key)
+        print(f"# {len(items)} work items")
+        return 0
+
+    t0 = time.monotonic()
+    measured = skipped = 0
+    interrupted = False
+    for i, (p, dtype, batch, key) in enumerate(items):
+        if args.max_seconds and time.monotonic() - t0 > args.max_seconds:
+            interrupted = True
+            remaining = len(items) - i
+            print(f"-- budget of {args.max_seconds}s exhausted with "
+                  f"{remaining} keys remaining; re-run the same command to "
+                  f"resume (completed keys replay from the cache).")
+            break
+        res = autotune_result(p, dtype=dtype, batch=batch, cache=cache,
+                              max_measure=args.max_measure,
+                              repeats=args.repeats)
+        if res.from_cache:
+            skipped += 1
+            status = "cached"
+        else:
+            measured += 1
+            status = f"measured {res.n_measured}/{res.n_candidates}"
+        pl = res.plan
+        print(f"[{i + 1}/{len(items)}] {key} -> "
+              f"oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order}"
+              f"/{pl.method or 'mm2im'} us={res.us:.1f} ({status})")
+
+    print(f"-- sweep: measured={measured} skipped={skipped} "
+          f"elapsed={time.monotonic() - t0:.1f}s "
+          f"cache={cache.path} entries={len(cache)}"
+          + (" (interrupted)" if interrupted else ""))
+    if args.expect_measured is not None and measured != args.expect_measured:
+        print(f"-- FAIL: expected exactly {args.expect_measured} measured "
+              f"keys, got {measured} (resumability regression?)")
+        return 2
+    return 0
+
+
+def _majority(values, fallback):
+    """Most common non-None value, or the fallback when none recorded."""
+    counts = {}
+    for v in values:
+        if v is not None:
+            counts[v] = counts.get(v, 0) + 1
+    return max(counts, key=counts.get) if counts else fallback
+
+
+def run_export(args) -> int:
+    """Promote the user cache into a shipped-table file (merge per key).
+
+    Provenance is derived from the *entries'* recorded measurement
+    conditions (autotune_result stamps backend/repeats/jax per entry),
+    not from this invocation's flags — an export run on a different day,
+    jax version or default-repeats must not misdocument how the plans
+    were actually measured.  Exporting entries tuned on a different
+    backend than the table is labeled for is refused outright.
+    """
+    cache = PlanCache(args.cache)
+    keys = [k for k in cache.keys() if not args.filter or args.filter in k]
+    if not keys:
+        print(f"-- nothing to export: no matching entries in {cache.path}")
+        return 1
+    picked = {k: cache.get_entry(k) for k in keys}
+    backend = args.backend or jax.default_backend()
+    alien = sorted({e.get("backend") for e in picked.values()
+                    if e.get("backend") not in (None, backend)})
+    if alien:
+        print(f"-- FAIL: cache holds entries tuned on backend(s) "
+              f"{alien}, refusing to export them into a {backend!r} table; "
+              f"export each backend to its own table (e.g. --backend "
+              f"{alien[0]} --export .../{alien[0]}.json), using --filter "
+              f"if the cache mixes backends per key")
+        return 2
+    out = Path(args.export)
+    entries = {}
+    if out.exists():  # incremental promotion: new tuning updates old table
+        try:
+            prior = json.loads(out.read_text())
+            if prior.get("version") == plan_table.TABLE_VERSION:
+                entries = dict(prior.get("entries", {}))
+        except ValueError:
+            print(f"-- warning: existing {out} unreadable, overwriting")
+    entries.update(picked)
+    table = {
+        "version": plan_table.TABLE_VERSION,
+        "provenance": {
+            "backend": backend,
+            "jax": _majority((e.get("jax") for e in entries.values()),
+                             jax.__version__),
+            "repeats": _majority((e.get("repeats")
+                                  for e in entries.values()), args.repeats),
+            "created": time.time(),
+            "note": args.note,
+        },
+        "entries": entries,
+    }
+    errs = plan_table.validate_table_json(table, source=str(out))
+    if errs:
+        print("-- FAIL: refusing to export an invalid table:")
+        for e in errs:
+            print(f"   {e}")
+        return 2
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(table, indent=1, sort_keys=True) + "\n")
+    print(f"-- exported {len(keys)} entries ({len(entries)} total) from "
+          f"{cache.path} to {out} (backend={backend})")
+    return 0
+
+
+def run_validate(args) -> int:
+    """Schema-validate every committed table (CI gate)."""
+    d = Path(args.table_dir) if args.table_dir else plan_table.table_dir()
+    files = sorted(d.glob("*.json")) if d.is_dir() else []
+    if not files:
+        print(f"-- no tables under {d} (nothing to validate)")
+        return 0
+    bad = 0
+    for f in files:
+        try:
+            t = plan_table.load_table(f.stem, directory=d, strict=True)
+        except ValueError as e:
+            print(f"-- FAIL {f}: {e}")
+            bad += 1
+            continue
+        print(f"-- ok {f}: backend={t.provenance['backend']} "
+              f"jax={t.provenance['jax']} entries={len(t)}")
+    return 1 if bad else 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    ap.add_argument("--cache", default=None,
+                    help="plan cache file (default: $REPRO_AUTOTUNE_CACHE "
+                         f"or {default_cache_path()})")
+    ap.add_argument("--dtypes", default="f32,int8",
+                    help="comma list from f32,bf16,int8")
+    ap.add_argument("--batches", default="1,8", help="comma list of batches")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="tune at most N work items")
+    ap.add_argument("--filter", default=None,
+                    help="only keys containing this substring")
+    ap.add_argument("--small", action="store_true",
+                    help="interpret-friendly small-problem slice only")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="stop (resumably) after this wall-time budget")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per candidate")
+    ap.add_argument("--max-measure", type=int, default=6,
+                    help="survivors timed per problem")
+    ap.add_argument("--list", action="store_true",
+                    help="print the work-item keys and exit (no tuning)")
+    ap.add_argument("--expect-measured", type=int, default=None,
+                    help="exit 2 unless exactly N keys were measured "
+                         "(CI resumability assertion)")
+    ap.add_argument("--export", metavar="TABLE_JSON", default=None,
+                    help="no tuning: promote the cache into a shipped-table "
+                         "file (merging into an existing one)")
+    ap.add_argument("--backend", default=None,
+                    help="provenance backend label for --export "
+                         "(default: jax.default_backend())")
+    ap.add_argument("--note", default="tools/tune_sweep.py export",
+                    help="provenance note for --export")
+    ap.add_argument("--validate-tables", action="store_true",
+                    help="no tuning: schema-validate committed plan tables")
+    ap.add_argument("--table-dir", default=None,
+                    help="table directory for --validate-tables "
+                         "(default: the packaged src/repro/data/plans)")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.validate_tables:
+        return run_validate(args)
+    if args.export:
+        return run_export(args)
+    return run_sweep(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
