@@ -1,4 +1,4 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission (+ JSON row capture)."""
 
 from __future__ import annotations
 
@@ -6,6 +6,11 @@ import time
 
 import jax
 import numpy as np
+
+# Every emit() is also recorded here so benchmarks.run can serialize the
+# whole run as a JSON artifact (the CI perf-trajectory file) — same rows,
+# machine-readable.
+_ROWS: list[dict] = []
 
 
 def time_fn(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
@@ -21,4 +26,15 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rows() -> list[dict]:
+    """All rows emitted so far in this process (insertion order)."""
+    return list(_ROWS)
+
+
+def clear_rows() -> None:
+    _ROWS.clear()

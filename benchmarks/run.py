@@ -1,13 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT.json]``
 
-Emits ``name,us_per_call,derived`` CSV lines (stdout).
+Emits ``name,us_per_call,derived`` CSV lines (stdout).  ``--json`` also
+writes every emitted row (plus run metadata: backend, jax version,
+timestamp) to a JSON file — the machine-readable perf-trajectory artifact
+CI records per commit (``BENCH_autotune.json`` for the autotune slice).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -28,20 +32,44 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write the emitted rows + run metadata as JSON "
+                         "(the CI perf-trajectory artifact)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
+    ran = []
     for name, mod in MODULES:
         if args.only and args.only != name:
             continue
         t0 = time.time()
         try:
             __import__(mod, fromlist=["main"]).main()
+            ran.append(name)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1
             print(f"# {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        import jax
+
+        from benchmarks import common
+
+        doc = {
+            "schema": 1,
+            "created": time.time(),
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "modules": ran,
+            "failures": failures,
+            "rows": common.rows(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(doc['rows'])} rows to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -15,9 +15,10 @@ with a measure-don't-guess loop:
      (``core/perf_model.mm2im_estimate`` / ``mm2im_db_estimate``,
      including the overlapped-copy term) and keep the top few, always
      including the heuristic default;
-  3. **measure** — wall-time the survivors through the real kernels
-     (:data:`KERNEL_RUNNERS` — Pallas TPU kernels on TPU, interpret mode
-     elsewhere);
+  3. **measure** — wall-time the survivors **through the kernel registry**
+     (``kernels.ops.run_registered`` — Pallas TPU kernels on TPU,
+     interpret mode elsewhere), with the same epilogue-splitting contract
+     dispatch uses, so the timed program is the program inference runs;
   4. **persist** — store the winner in an on-disk JSON cache keyed by
      ``(TConvProblem, dtype, hw, batch)`` so later processes skip straight
      to the tuned plan.
@@ -30,11 +31,16 @@ needs **no** explicit ``plans=`` threading at all: tune once, every later
 process with the same cache hits the tuned plan.  See docs/AUTOTUNER.md
 for the file format, the key schema and the consumption precedence.
 
-Tuning a third-party registry variant: register the kernel
-(``kernels/registry.register`` — see that module's docstring), add its
-runner to :data:`KERNEL_RUNNERS` and, if ``core/tiling.candidate_plans``
-should enumerate it, pass it in that function's ``methods=``.  Tuned plans
-then carry ``Plan.method`` naming the variant and dispatch back to it.
+Tuning a third-party registry variant needs **no wiring here**: register
+the kernel with ``supports_plan=True`` (``kernels/registry.register`` —
+see that module's docstring) and ``core/tiling.candidate_plans``
+enumerates it, this module measures it through the registry (both f32 and
+int8 — specs without native int8 are timed through the dispatcher's
+dequant->requant fallback, the program they would actually serve), and
+tuned plans carry ``Plan.method`` naming the variant so both ``ops.tconv``
+and ``ops.tconv_int8`` dispatch back to it.  Variants with a bespoke
+roofline can extend :data:`METHOD_ESTIMATORS`; unknown methods rank with
+the single-buffered estimate.
 
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune_cache.json``.  Below the user cache sits the
@@ -54,34 +60,27 @@ import math
 import os
 import time
 from pathlib import Path
-from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+from typing import Iterable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tiling
+from repro.core.epilogue import Epilogue
 from repro.core.maps import TConvProblem
 from repro.core.perf_model import HW, V5E, mm2im_db_estimate, mm2im_estimate
-from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
-from repro.kernels.mm2im_pallas import mm2im_tconv
+from repro.kernels import ops as kernel_ops
 from repro.kernels.registry import Plan
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = "~/.cache/repro/autotune_cache.json"
 _CACHE_VERSION = 1
 
-# method name -> direct kernel entry point with the mm2im_tconv signature.
-# The autotuner times these (registry dispatch adds jit/epilogue layers the
-# measurement should not include); extend for third-party plan-capable
-# variants.
-KERNEL_RUNNERS: Dict[str, object] = {
-    "mm2im": mm2im_tconv,
-    "mm2im_db": mm2im_db_tconv,
-}
-
-# method name -> roofline estimator used by the pruning stage.
-_METHOD_ESTIMATORS = {
+# method name -> roofline estimator used by the pruning stage.  Methods
+# without an entry (third-party variants) rank with the single-buffered
+# estimate — measurement, not the model, decides the winner anyway.
+METHOD_ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
 }
@@ -277,18 +276,24 @@ def measure_plan(p: TConvProblem, plan: Plan, *, batch: int = 1,
                  warmup: int = 1) -> float:
     """Median wall-time (us) of the plan's kernel variant under the plan.
 
-    ``plan.method`` selects the entry point from :data:`KERNEL_RUNNERS`
-    (``None`` means the single-buffered default).  Integer dtypes are
-    timed with the requant epilogue attached (:func:`measure_epilogue`).
+    ``plan.method`` names the registered method to time (``None`` means
+    the single-buffered default); the candidate runs through the registry
+    itself (``kernels.ops.run_registered``) with the dispatcher's
+    epilogue-splitting contract, so any registered variant is measurable
+    with zero wiring and the timed program matches what dispatch executes
+    — including the dequant->requant fallback for variants without native
+    int8.  Integer dtypes are timed with the requant epilogue attached
+    (:func:`measure_epilogue`).
     """
     x, w = _rand_inputs(p, batch, dtype)
-    kernel = KERNEL_RUNNERS[plan.method or "mm2im"]
+    method = plan.method or "mm2im"
     bias, out_scale = measure_epilogue(p, dtype)
+    ep = Epilogue(bias=bias, out_scale=out_scale)
+    geom = Plan(plan.block_oh, plan.block_oc, plan.grid_order)
 
-    fn = jax.jit(lambda xx, ww: kernel(
-        xx, ww, bias, stride=p.stride, padding=p.padding,
-        block_oh=plan.block_oh, block_oc=plan.block_oc,
-        grid_order=plan.grid_order, out_scale=out_scale))
+    fn = jax.jit(lambda xx, ww: kernel_ops.run_registered(
+        method, xx, ww, stride=p.stride, padding=p.padding, epilogue=ep,
+        plan=geom))
     for _ in range(warmup):
         jax.block_until_ready(fn(x, w))
     ts = []
@@ -356,7 +361,7 @@ def autotune_result(
     # the default in the field so the measurement is always at least a
     # default-vs-challenger comparison.
     def score(pl: Plan) -> float:
-        est = _METHOD_ESTIMATORS[pl.method or "mm2im"]
+        est = METHOD_ESTIMATORS.get(pl.method or "mm2im", mm2im_estimate)
         return est(p, batch, block_oh=pl.block_oh, block_oc=pl.block_oc,
                    bits=bits, grid_order=pl.grid_order, hw=hw).t_overlapped
 

@@ -1,0 +1,240 @@
+"""PPU epilogue — the post-MatMul stage pipeline every TCONV method shares.
+
+The paper's accelerator treats requantization as one stage of the PPU
+epilogue, not a separate datapath: every output element flows through
+
+    bias add  ->  requant (round/clip to int8)  ->  activation  ->  store
+
+regardless of precision.  This module makes that pipeline a first-class
+value type so the whole repo agrees on it:
+
+* :class:`Epilogue` — what should happen to the raw accumulator before the
+  single HBM store: optional bias, optional requant (``out_scale`` — a
+  python float for per-tensor, a length-``Oc`` array for TFLite-style
+  per-channel), an activation name, and the output dtype.  Registered as a
+  jax pytree: the arrays (bias, per-channel scales) are traced leaves, the
+  static knobs (activation, per-tensor scale, output dtype) live in the
+  treedef — so an ``Epilogue`` rides through ``jax.jit`` with the correct
+  retrace semantics and no manual static-argname bookkeeping.
+* :data:`STAGES` — the canonical stage order.  A kernel may fuse any
+  *prefix* of the present stages (:meth:`Epilogue.split`); the dispatcher
+  (``kernels/ops.py``) applies the remaining suffix with
+  :func:`apply_epilogue`, which is what keeps every registered method
+  numerically interchangeable — and every method quantization-capable via
+  the dispatcher's dequant -> compute -> requant fallback.
+* :data:`ACTIVATIONS` / :data:`LEAKY_RELU_SLOPE` — the one activation
+  table (previously private to ``kernels/mm2im_pallas.py``) and the one
+  leaky-relu slope, shared by the Pallas kernel forwards, the dispatcher's
+  unfused remainder, and the ``custom_vjp`` backward
+  (:func:`activation_grad_from_output`).
+
+This module imports nothing from the rest of the repo, so every layer
+(kernels, registry, dispatcher, autotuner) can depend on it cycle-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, FrozenSet, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+# The single definition of the leaky-relu negative slope.  The kernel
+# forward (via ACTIVATIONS) and the custom_vjp backward (via
+# activation_grad_from_output) both read it from here.
+LEAKY_RELU_SLOPE = 0.2
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "tanh": jnp.tanh,
+    "leaky_relu": lambda x: jnp.where(x >= 0, x, LEAKY_RELU_SLOPE * x),
+}
+
+# Canonical stage order (paper PPU; DESIGN.md §4).  A kernel may fuse any
+# prefix of the *present* stages; the dispatcher applies the rest.
+STAGES: Tuple[str, ...] = ("bias", "requant", "activation")
+
+
+def apply_activation(name: str, x):
+    """Apply a named activation (the PPU nonlinearity stage)."""
+    return ACTIVATIONS[name](x)
+
+
+def activation_grad_from_output(name: str, out, g):
+    """VJP of the activation given its *output* (custom_vjp residuals hold
+    the post-activation tensor, not the pre-activation one)."""
+    if name == "none":
+        return g
+    if name == "relu":
+        return g * (out > 0)
+    if name == "tanh":
+        return g * (1.0 - out * out)
+    if name == "leaky_relu":
+        return g * jnp.where(out >= 0, 1.0, LEAKY_RELU_SLOPE)
+    raise ValueError(f"activation must be one of {tuple(ACTIVATIONS)}, "
+                     f"got {name!r}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """What happens to the raw accumulator before the HBM store.
+
+    ``bias``: optional ``(Oc,)`` vector (int32 for the int8 path).
+    ``out_scale``: ``None`` (no requant), a python float (per-tensor
+    requant — static under jit), or a ``(Oc,)`` array (per-channel requant
+    — a traced operand).
+    ``activation``: a key of :data:`ACTIVATIONS`.
+    ``out_dtype``: final store dtype; ``None`` means the natural
+    accumulator dtype (f32, or int32 for integer inputs without requant,
+    int8 with requant — see :meth:`resolved_out_dtype`).
+    """
+
+    bias: Optional[Any] = None
+    activation: str = "none"
+    out_scale: Union[None, float, Any] = None
+    out_dtype: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"activation must be one of {tuple(ACTIVATIONS)}, "
+                f"got {self.activation!r}")
+
+    # -- pytree protocol ----------------------------------------------------
+    # Arrays (bias, per-channel scales) are children; the static knobs
+    # (activation, per-tensor float scale, out dtype) are hashable aux data,
+    # so jit retraces exactly when the static epilogue shape changes.
+
+    def tree_flatten(self):
+        per_channel = self.per_channel
+        children = (self.bias, self.out_scale if per_channel else None)
+        aux = (self.activation,
+               None if per_channel else self.out_scale,
+               per_channel,
+               None if self.out_dtype is None
+               else jnp.dtype(self.out_dtype).name)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        activation, scalar_scale, per_channel, dtype_name = aux
+        bias, channel_scale = children
+        return cls(bias=bias, activation=activation,
+                   out_scale=channel_scale if per_channel else scalar_scale,
+                   out_dtype=None if dtype_name is None
+                   else jnp.dtype(dtype_name))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def per_channel(self) -> bool:
+        """True when ``out_scale`` is a per-channel array (not float/None)."""
+        return self.out_scale is not None and not isinstance(
+            self.out_scale, (int, float))
+
+    def stages(self) -> Tuple[str, ...]:
+        """The present stages, in canonical order."""
+        out = []
+        if self.bias is not None:
+            out.append("bias")
+        if self.out_scale is not None:
+            out.append("requant")
+        if self.activation != "none":
+            out.append("activation")
+        return tuple(out)
+
+    @property
+    def is_noop(self) -> bool:
+        return not self.stages() and self.out_dtype is None
+
+    def resolved_out_dtype(self, integer: bool):
+        """The concrete store dtype this epilogue produces.
+
+        Mirrors the kernel-side inference in ``prepare_mm2im``: integer
+        inputs accumulate in int32 and requantize to int8; floats keep the
+        f32 accumulator (``None`` = leave unchanged).
+        """
+        if self.out_dtype is not None:
+            return self.out_dtype
+        if not integer:
+            return None
+        return jnp.int8 if self.out_scale is not None else jnp.int32
+
+    def with_resolved_out_dtype(self, integer: bool) -> "Epilogue":
+        dt = self.resolved_out_dtype(integer)
+        if dt is None or self.out_dtype is not None:
+            return self
+        return dataclasses.replace(self, out_dtype=dt)
+
+    # -- the fusion contract ------------------------------------------------
+
+    def split(self, fuses: FrozenSet[str]) -> Tuple["Epilogue", "Epilogue"]:
+        """Split into ``(kernel_part, dispatcher_part)`` under ``fuses``.
+
+        The kernel may fuse any *prefix* of the present stages (a stage can
+        only run inside the kernel if every earlier present stage does too
+        — fusing the activation before an unfused bias add would change
+        the math).  Additionally the requant stage only fuses when the
+        whole remaining tail does: requant decides the store dtype, and a
+        dispatcher-side stage after an in-kernel int8 cast would see
+        already-quantized values.
+
+        ``out_dtype`` (the final store cast) stays with the dispatcher
+        unless the kernel fuses requant — only a requant-fusing kernel
+        commits to the quantized store dtype.
+        """
+        present = self.stages()
+        kernel_stages = []
+        for s in present:
+            if s not in fuses:
+                break
+            kernel_stages.append(s)
+        if "requant" in kernel_stages and len(kernel_stages) < len(present):
+            kernel_stages = kernel_stages[:kernel_stages.index("requant")]
+        ks = frozenset(kernel_stages)
+        rest_stages = [s for s in present if s not in ks]
+        # The final store cast belongs to the dispatcher unless the kernel
+        # fuses the requant stage (fusing requant means the kernel commits
+        # to the quantized store dtype; a kernel that fuses nothing cannot
+        # be asked to cast).
+        kernel_casts = "requant" in ks
+        kernel_part = Epilogue(
+            bias=self.bias if "bias" in ks else None,
+            activation=self.activation if "activation" in ks else "none",
+            out_scale=self.out_scale if "requant" in ks else None,
+            out_dtype=self.out_dtype if kernel_casts else None)
+        rest_part = Epilogue(
+            bias=self.bias if "bias" in rest_stages else None,
+            activation=self.activation if "activation" in rest_stages
+            else "none",
+            out_scale=self.out_scale if "requant" in rest_stages else None,
+            out_dtype=None if kernel_casts else self.out_dtype)
+        return kernel_part, rest_part
+
+
+def apply_epilogue(out, ep: Epilogue):
+    """Apply an epilogue (or remainder) outside a kernel, canonical order.
+
+    This is the dispatcher's implementation of the PPU for stages a kernel
+    did not fuse; it performs the same operations in the same order as the
+    fused ``ppu_epilogue`` in ``kernels/mm2im_pallas.py`` (bias -> requant
+    round/clip -> activation -> store cast), so fused and unfused
+    execution of the same :class:`Epilogue` agree.
+    """
+    if ep.bias is not None:
+        out = out + ep.bias.astype(out.dtype)[None, None, None, :]
+    if ep.out_scale is not None:
+        scale = jnp.asarray(ep.out_scale, jnp.float32)
+        out = jnp.round(out.astype(jnp.float32) * scale)
+        out = jnp.clip(out, -128.0, 127.0)
+    out = ACTIVATIONS[ep.activation](out)
+    if ep.out_dtype is not None:
+        dt = jnp.dtype(ep.out_dtype)
+        if (jnp.issubdtype(dt, jnp.integer)
+                and not jnp.issubdtype(out.dtype, jnp.integer)):
+            out = jnp.round(out)
+        out = out.astype(dt)
+    return out

@@ -119,28 +119,50 @@ def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
 
 # Candidate grids mirror plan_blocks' search space; the autotuner measures
 # instead of guessing, so it also explores both explicit grid orders and
-# both kernel variants (single- vs double-buffered).
+# every plan-capable kernel variant.
 _CAND_BI = (1, 2, 4, 8, 16, 32, 64)
 _CAND_BOC = (8, 16, 32, 64, 128, 256)
+# Fallback when the registry has not been populated yet (built-ins register
+# on `kernels.ops` import).
 _CAND_METHODS = ("mm2im", "mm2im_db")
+
+
+def _registered_plan_methods() -> tuple:
+    """Plan-capable methods currently in the kernel registry.
+
+    This is what makes a third-party ``supports_plan=True`` variant
+    autotunable with zero wiring: registering it is enough for the
+    enumeration stage to produce candidates carrying its name.  Unknown
+    variants are budget-modeled with the (conservative) whole-input
+    residency of the single-buffered kernel.
+    """
+    from repro.kernels import ops  # noqa: F401  (registers the built-ins)
+    from repro.kernels import registry as kernel_registry
+
+    names = tuple(s.name for s in kernel_registry.specs() if s.supports_plan)
+    return names or _CAND_METHODS
 
 
 def candidate_plans(
     p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
     vmem_fraction: float = 0.75,
-    methods: tuple = _CAND_METHODS,
+    methods: Optional[tuple] = None,
 ) -> List[TilePlan]:
     """Every legal (method, block_oh, block_oc, grid_order) under the budget.
 
     This is the autotuner's enumeration stage (paper Alg. 1 evaluated
     per-problem instead of once): all stride-aligned output-row blocks that
     don't overrun the output, all channel blocks up to O_c, both explicit
-    grid orders, and — where the pipeline has at least two row blocks to
-    overlap — the double-buffered kernel variant.  Each variant is
-    budget-filtered under its *own* VMEM residency model, so 'mm2im_db'
-    legally reaches block geometries 'mm2im' cannot hold.  Deduplicated;
-    order is deterministic.
+    grid orders, and every plan-capable registered kernel variant
+    (``methods=None`` queries the registry — see
+    :func:`_registered_plan_methods`).  Where the pipeline has fewer than
+    two row blocks to overlap, the double-buffered variant is skipped.
+    Each variant is budget-filtered under its *own* VMEM residency model,
+    so 'mm2im_db' legally reaches block geometries 'mm2im' cannot hold.
+    Deduplicated; order is deterministic.
     """
+    if methods is None:
+        methods = _registered_plan_methods()
     budget = int(hw.vmem_bytes * vmem_fraction)
     s = p.stride
     seen = set()

@@ -45,20 +45,19 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.epilogue import ACTIVATIONS
 from repro.kernels.ref import crop_offsets, out_size
 
-_ACTIVATIONS: dict[str, Callable] = {
-    "relu": lambda x: jnp.maximum(x, 0),
-    "tanh": jnp.tanh,
-    "leaky_relu": lambda x: jnp.where(x >= 0, x, 0.2 * x),
-    "none": lambda x: x,
-}
+# Back-compat alias: the activation table (and the leaky-relu slope) moved
+# to the shared PPU epilogue module so the kernel forward, the dispatcher's
+# unfused remainder and the custom_vjp backward agree by construction.
+_ACTIVATIONS = ACTIVATIONS
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -172,7 +171,12 @@ def col2im_accumulate(mm5, *, s: int, ks: int, ct: int, cl: int, bi: int,
 def ppu_epilogue(out, bias_vec, scales_vec, *, acc_dtype, activation: str,
                  out_scale, per_channel: bool, out_dtype):
     """PPU epilogue: bias + (per-tensor or per-channel, TFLite-style)
-    requant + activation, fused before the single HBM write."""
+    requant + activation, fused before the single HBM write.
+
+    Same stage order and rounding as the dispatcher-side
+    ``core.epilogue.apply_epilogue`` (an integer store rounds, never
+    truncates), so fused and unfused execution of one epilogue agree.
+    """
     out = out + bias_vec.astype(acc_dtype)[None, None, :]
     if per_channel:
         out = jnp.round(out.astype(jnp.float32) * scales_vec[None, None, :])
@@ -180,7 +184,10 @@ def ppu_epilogue(out, bias_vec, scales_vec, *, acc_dtype, activation: str,
     elif out_scale is not None:
         out = jnp.round(out.astype(jnp.float32) * out_scale)
         out = jnp.clip(out, -128.0, 127.0)
-    out = _ACTIVATIONS[activation](out)
+    out = ACTIVATIONS[activation](out)
+    if (jnp.issubdtype(jnp.dtype(out_dtype), jnp.integer)
+            and not jnp.issubdtype(out.dtype, jnp.integer)):
+        out = jnp.round(out)
     return out.astype(out_dtype)
 
 

@@ -1,8 +1,13 @@
-"""Public TCONV op: jit'd, differentiable dispatch over implementations.
+"""Public TCONV ops: one jit'd, differentiable dispatch pipeline.
 
-``tconv(x, w, bias, stride=…, method=…)`` is the framework-facing API used
-by ``layers`` and the GAN models.  Dispatch goes through the pluggable
-kernel registry (``kernels/registry.py``); the built-in methods are:
+``tconv(x, w, bias, stride=…, method=…)`` and ``tconv_int8(x_q, w_q,
+bias_q, out_scale, stride=…)`` are the framework-facing API used by
+``layers`` and the GAN models.  Both are thin wrappers that build an
+:class:`~repro.core.epilogue.Epilogue` (bias + optional requant +
+activation + output dtype) and hand it to a single shared dispatcher —
+there is exactly one implementation of plan normalization/validation, the
+four-tier plan lookup, the ``Plan.method`` variant-upgrade rule, and the
+unfused-epilogue remainder, for every precision.  The built-in methods:
 
   * ``'mm2im'``         — the paper's technique: fused Pallas kernel
                           (``mm2im_pallas.mm2im_tconv``).  Default.
@@ -14,6 +19,21 @@ kernel registry (``kernels/registry.py``); the built-in methods are:
   * ``'zero_insertion'``— §II-A method (i) baseline.
   * ``'tdc'``           — §II-A method (ii) baseline.
   * ``'lax'``           — XLA's native conv_transpose (gold).
+
+**Epilogue contract.**  Each registered :class:`~repro.kernels.registry.
+KernelSpec` declares which PPU stages it fuses; the dispatcher splits the
+requested epilogue into the fused prefix (handed to the kernel) and the
+unfused remainder (applied here, ``core.epilogue.apply_epilogue``).  A
+method without ``supports_int8`` still serves int8 problems: the
+dispatcher dequantizes the operands to f32, runs the kernel, and applies
+the integer epilogue (bias, requant round/clip, int8 store) itself — so
+**every** registered method is quantization-capable, which is what lets
+the benchmarks compare the paper's int8 mode against the §II-A baselines.
+Fallback precision caveat: the f32 accumulation is exact only while
+partial sums stay below 2^24 (|acc| ≲ ``Ic*Ks^2 * 127^2``); past that the
+fallback can differ from the native int32 path by an LSB or two around
+requant rounding boundaries — fine for baseline comparisons, which is
+what it exists for (the native kernels stay bit-exact at every size).
 
 An explicit tile plan (``registry.Plan`` or a ``(block_oh, block_oc[,
 grid_order])`` tuple — typically produced by ``core/autotune.py``) can be
@@ -29,7 +49,9 @@ explicit ``plan=`` > user cache hit > shipped per-backend plan table
 records which tier served each hit.  Disable with
 ``REPRO_AUTOTUNE_AUTOLOAD=0``.  The lookup happens once per jit trace, so
 a cache written *after* a shape was first compiled is only seen by new
-traces.
+traces.  Both entry points share the jit'd dispatcher (same static-argname
+discipline), so repeated ``tconv_int8`` calls on one shape compile once —
+``dispatch_trace_count()`` observes the retrace behaviour in tests.
 
 Training support: the Pallas forwards are wrapped in ``jax.custom_vjp``
 whose backward pass is the (automatically derived) VJP of the
@@ -46,10 +68,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import epilogue as epi
+from repro.core.epilogue import Epilogue
 from repro.kernels import baselines, ref, registry
 from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
 from repro.kernels.mm2im_pallas import mm2im_tconv
 from repro.kernels.registry import Plan, PlanLike
+
+DEFAULT_METHOD = "mm2im"
 
 
 def _fwd_math(x, w, bias, *, stride, padding):
@@ -83,13 +109,9 @@ def _make_mm2im_diff(kernel_fn):
 
     def bwd(stride, padding, activation, plan, res, g):
         x, w, bias, out = res
-        # Activation backward (epilogue was fused into the kernel).
-        if activation == "relu":
-            g = g * (out > 0)
-        elif activation == "tanh":
-            g = g * (1.0 - out * out)
-        elif activation == "leaky_relu":
-            g = g * jnp.where(out >= 0, 1.0, 0.2)
+        # Activation backward (the epilogue was fused into the kernel); the
+        # shared table keeps e.g. the leaky-relu slope in one place.
+        g = epi.activation_grad_from_output(activation, out, g)
         # Zero-bias placeholder in the *weight* dtype: an f32 constant here
         # silently promotes the replayed bf16 forward to f32.
         bias0 = jnp.zeros((w.shape[2],), w.dtype) if bias is None else bias
@@ -113,40 +135,65 @@ _mm2im_db_diff = _make_mm2im_diff(mm2im_db_tconv)
 # ---------------------------------------------------------------------------
 
 
-@registry.register(
-    "mm2im", fuses_bias=True, fuses_activation=True, supports_plan=True,
-    description="fused Pallas MM2IM kernel (paper technique; default)")
-def _mm2im_impl(x, w, bias, *, stride, padding, activation, plan):
-    return _mm2im_diff(x, w, bias, stride, padding, activation, plan)
+def _make_mm2im_impl(diff_fn, kernel_fn):
+    """Registry entry point for one MM2IM-family kernel variant.
+
+    The requant path calls the kernel directly (the PPU epilogue incl.
+    int8 store is fused, nothing to differentiate through); every other
+    epilogue goes through the custom_vjp wrapper so training works.
+    """
+
+    def impl(x, w, *, stride, padding, epilogue, plan):
+        if epilogue.out_scale is not None:
+            kw = {}
+            if plan is not None:
+                kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
+                          grid_order=plan.grid_order)
+            return kernel_fn(x, w, epilogue.bias, stride=stride,
+                             padding=padding, activation=epilogue.activation,
+                             out_scale=epilogue.out_scale,
+                             out_dtype=epilogue.out_dtype, **kw)
+        # No requant -> the differentiable path; the dispatcher owns any
+        # remaining stages and the final store cast (Epilogue.split).
+        return diff_fn(x, w, epilogue.bias, stride, padding,
+                       epilogue.activation, plan)
+
+    return impl
 
 
-@registry.register(
-    "mm2im_db", fuses_bias=True, fuses_activation=True, supports_plan=True,
-    description="double-buffered MM2IM: slab DMA pipelined against compute")
-def _mm2im_db_impl(x, w, bias, *, stride, padding, activation, plan):
-    return _mm2im_db_diff(x, w, bias, stride, padding, activation, plan)
+registry.register(
+    "mm2im", fuses=("bias", "requant", "activation"), supports_plan=True,
+    supports_int8=True,
+    description="fused Pallas MM2IM kernel (paper technique; default)")(
+        _make_mm2im_impl(_mm2im_diff, mm2im_tconv))
+
+registry.register(
+    "mm2im_db", fuses=("bias", "requant", "activation"), supports_plan=True,
+    supports_int8=True,
+    description="double-buffered MM2IM: slab DMA pipelined against compute")(
+        _make_mm2im_impl(_mm2im_db_diff, mm2im_db_tconv))
 
 
 @registry.register(
     "iom_unfused",
     description="paper Eq. (2) unfused: MatMul -> HBM -> col2im scatter")
-def _iom_unfused_impl(x, w, bias, *, stride, padding, activation, plan):
+def _iom_unfused_impl(x, w, *, stride, padding, epilogue, plan):
     return ref.iom_reference(x, w, stride=stride, padding=padding)
 
 
 @registry.register(
     "zero_insertion", description="§II-A method (i) baseline")
-def _zero_insertion_impl(x, w, bias, *, stride, padding, activation, plan):
+def _zero_insertion_impl(x, w, *, stride, padding, epilogue, plan):
     return baselines.zero_insertion_tconv(x, w, stride=stride, padding=padding)
 
 
 @registry.register("tdc", description="§II-A method (ii) baseline")
-def _tdc_impl(x, w, bias, *, stride, padding, activation, plan):
+def _tdc_impl(x, w, *, stride, padding, epilogue, plan):
     return baselines.tdc_tconv(x, w, stride=stride, padding=padding)
 
 
 @registry.register("lax", description="XLA native conv_transpose (gold)")
-def _lax_impl(x, w, bias, *, stride, padding, activation, plan):
+def _lax_impl(x, w, *, stride, padding, epilogue, plan):
     return ref.tconv_lax(x, w, stride=stride, padding=padding)
 
 
@@ -182,8 +229,8 @@ def _autoload_enabled() -> bool:
 def _auto_plan(x, w, stride: int, padding: str) -> Optional[Plan]:
     """Trace-time lookup of a tuned plan for this problem key (or None).
 
-    Runs while ``tconv`` traces, so shapes/dtypes are concrete; any cache
-    problem degrades to the heuristic default rather than raising.
+    Runs while the dispatcher traces, so shapes/dtypes are concrete; any
+    cache problem degrades to the heuristic default rather than raising.
     """
     if not _autoload_enabled():
         return None
@@ -211,16 +258,16 @@ def _auto_plan(x, w, stride: int, padding: str) -> Optional[Plan]:
 
 
 # ---------------------------------------------------------------------------
-# Dispatch.
+# Dispatch — the one pipeline both public entry points share.
 # ---------------------------------------------------------------------------
 
 
 def _check_explicit_plan(plan: Plan, stride: int) -> None:
     """Reject explicit-plan geometry the kernels cannot tile.
 
-    Shared by ``tconv`` and ``tconv_int8`` so both entry points surface
-    the same caller error (auto-loaded plans with these defects are
-    silently discarded by ``_auto_plan`` instead).
+    Shared by ``tconv`` and ``tconv_int8`` (one dispatcher) so both entry
+    points surface the same caller error; auto-loaded plans with these
+    defects are silently discarded by ``_auto_plan`` instead.
     """
     if plan.block_oh % stride != 0:
         raise ValueError(
@@ -228,9 +275,96 @@ def _check_explicit_plan(plan: Plan, stride: int) -> None:
             f"stride {stride}")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("stride", "padding", "method", "activation", "plan"))
+def _run_spec(spec: registry.KernelSpec, x, w, *, stride, padding,
+              epilogue: Epilogue, plan: Optional[Plan]):
+    """Execute one registered spec: fused prefix in-kernel, remainder here.
+
+    For int8 problems on a spec without native int8 support this is the
+    dequant -> compute -> requant fallback: operands are dequantized to
+    f32, the kernel fuses nothing, and the full integer epilogue (bias,
+    requant round/clip, int8 store) is applied by the dispatcher — the
+    path that makes every registered method quantization-capable.
+    """
+    integer = jnp.issubdtype(jnp.dtype(x.dtype), jnp.integer)
+    ep = epilogue.with_resolved_out_dtype(integer)
+    fallback = integer and not spec.supports_int8
+    if fallback:
+        x = x.astype(jnp.float32)
+        w = w.astype(jnp.float32)
+    kernel_ep, rest = ep.split(frozenset() if fallback else spec.fuses)
+    out = spec.fn(x, w, stride=stride, padding=padding, epilogue=kernel_ep,
+                  plan=plan)
+    return epi.apply_epilogue(out, rest)
+
+
+def run_registered(method: str, x, w, *, stride, padding,
+                   epilogue: Epilogue, plan: Optional[Plan] = None):
+    """Run one registered method with the dispatcher's epilogue contract.
+
+    Exactly the execution half of the dispatch pipeline — no plan-cache
+    lookup, no variant upgrade.  This is what ``core/autotune.py`` times,
+    so any registered variant is autotunable in both precisions with zero
+    extra wiring (and measured on the same program dispatch will run).
+    """
+    return _run_spec(registry.get(method), x, w, stride=stride,
+                     padding=padding, epilogue=epilogue, plan=plan)
+
+
+# Trace counter: incremented each time the shared dispatcher actually
+# retraces.  Tests assert the static-argname discipline (e.g. repeated
+# tconv_int8 calls on one shape compile exactly once).
+_TRACE_COUNT = 0
+
+
+def dispatch_trace_count() -> int:
+    """How many times the shared jit'd dispatcher has (re)traced."""
+    return _TRACE_COUNT
+
+
+def _dispatch_impl(x, w, epilogue: Epilogue, *, stride: int, padding: str,
+                   method: str, plan: Optional[Plan]):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+    spec = registry.get(method)
+    if plan is not None and not spec.supports_plan:
+        raise ValueError(
+            f"method {method!r} does not accept an explicit tile plan")
+    if plan is not None:
+        _check_explicit_plan(plan, stride)
+    elif spec.supports_plan:
+        plan = _auto_plan(x, w, stride, padding)  # cache > shipped > heur.
+    if plan is not None and plan.method is not None:
+        # A plan tuned for a specific kernel variant upgrades the *default*
+        # dispatch to that variant; an explicitly requested non-default
+        # method wins over the plan's preference (geometry still applies).
+        # An unregistered plan.method (stale cache entry, plugin variant
+        # not imported in this process) quietly keeps the default — a bad
+        # cache must never break inference.
+        if plan.method != method and method == DEFAULT_METHOD:
+            try:
+                variant = registry.get(plan.method)
+            except ValueError:
+                variant = None
+            if variant is not None and variant.supports_plan:
+                spec = variant
+    return _run_spec(spec, x, w, stride=stride, padding=padding,
+                     epilogue=epilogue, plan=plan)
+
+
+_dispatch = jax.jit(
+    _dispatch_impl, static_argnames=("stride", "padding", "method", "plan"))
+
+
+def _norm_out_scale(out_scale):
+    """Normalize the requant scale: float stays static, arrays are traced."""
+    if out_scale is None or isinstance(out_scale, float):
+        return out_scale
+    if isinstance(out_scale, int):
+        return float(out_scale)
+    import numpy as _np
+    return _np.asarray(out_scale, _np.float32)
+
+
 def tconv(
     x: jax.Array,
     w: jax.Array,
@@ -238,89 +372,52 @@ def tconv(
     *,
     stride: int,
     padding: str = "SAME",
-    method: str = "mm2im",
+    method: str = DEFAULT_METHOD,
     activation: str = "none",
     plan: PlanLike = None,
+    out_scale=None,
+    out_dtype=None,
 ) -> jax.Array:
-    """Transposed convolution.  x: (B,Ih,Iw,Ic); w: (Ks,Ks,Oc,Ic) HWOI."""
-    spec = registry.get(method)
-    plan = registry.as_plan(plan)
-    if plan is not None and not spec.supports_plan:
-        raise ValueError(
-            f"method {method!r} does not accept an explicit tile plan")
-    if plan is None and spec.supports_plan:
-        plan = _auto_plan(x, w, stride, padding)  # cache > shipped > heur.
-    if plan is not None:
-        _check_explicit_plan(plan, stride)
-        # A plan tuned for a specific kernel variant upgrades the *default*
-        # dispatch to that variant; an explicitly requested non-default
-        # method wins over the plan's preference (geometry still applies).
-        # An unregistered plan.method (stale cache entry, plugin variant
-        # not imported in this process) quietly keeps the default — a bad
-        # cache must never break inference.
-        if (plan.method is not None and plan.method != method
-                and method == "mm2im"):
-            try:
-                variant = registry.get(plan.method)
-            except ValueError:
-                variant = None
-            if variant is not None and variant.supports_plan:
-                spec = variant
-    # Epilogue order is bias -> activation, so activation may only be fused
-    # into the kernel when the bias is also applied inside it (fused or
-    # absent); otherwise the kernel would activate before the bias add.
-    fuse_act = spec.fuses_activation and (bias is None or spec.fuses_bias)
-    out = spec.fn(x, w, bias if spec.fuses_bias else None,
-                  stride=stride, padding=padding,
-                  activation=activation if fuse_act else "none",
-                  plan=plan)
-    if bias is not None and not spec.fuses_bias:
-        out = out + bias[None, None, None, :]
-    if activation != "none" and not fuse_act:
-        from repro.kernels.mm2im_pallas import _ACTIVATIONS
-        out = _ACTIVATIONS[activation](out)
-    return out
+    """Transposed convolution.  x: (B,Ih,Iw,Ic); w: (Ks,Ks,Oc,Ic) HWOI.
+
+    ``out_scale`` / ``out_dtype`` optionally attach the PPU requant stage
+    (round/clip to int8) to any method — for int8 operands prefer the
+    :func:`tconv_int8` wrapper, which documents the quantized contract.
+    The requant epilogue is **inference-only** (the paper quantizes frozen
+    models): round/clip is not usefully differentiable, and the fused
+    requant kernels bypass the ``custom_vjp`` — do not take gradients
+    through a requantizing call (ROADMAP tracks a QAT story).
+    """
+    ep = Epilogue(bias=bias, activation=activation,
+                  out_scale=_norm_out_scale(out_scale), out_dtype=out_dtype)
+    return _dispatch(x, w, ep, stride=stride, padding=padding, method=method,
+                     plan=registry.as_plan(plan))
 
 
 def tconv_int8(
     x_q: jax.Array,
     w_q: jax.Array,
-    bias_q: jax.Array,
+    bias_q: Optional[jax.Array],
     out_scale,
     *,
     stride: int,
     padding: str = "SAME",
+    method: str = DEFAULT_METHOD,
+    activation: str = "none",
     plan: PlanLike = None,
 ) -> jax.Array:
-    """8-bit MM2IM TCONV (the paper's precision): int8 in, int8 out.
+    """8-bit TCONV (the paper's precision): int8 in, int8 out.
 
     ``out_scale`` is a python float (per-tensor requant) or a length-Oc
     array (TFLite-style per-channel requant, fused in the PPU epilogue).
-    With no explicit ``plan=``, the autotuner cache is consulted under the
-    int8 problem key; a plan tuned for ``'mm2im_db'`` runs the
-    double-buffered kernel (bit-identical int32 accumulation either way).
+    Runs through the same jit'd dispatcher as :func:`tconv` — same
+    static-argname discipline (no per-call retraces), same plan tiers,
+    same ``Plan.method`` variant upgrade.  ``method`` may name *any*
+    registered implementation: kernels without native int8 support run via
+    the dispatcher's dequant -> compute -> requant fallback, which is how
+    the §II-A baselines join the paper's int8 comparison.
     """
-    if not isinstance(out_scale, float):
-        import numpy as _np
-        out_scale = _np.asarray(out_scale, _np.float32)
-    plan = registry.as_plan(plan)
-    if plan is not None:
-        # Same contract as tconv: surfaced here rather than as a deeper
-        # kernel block-shape assert.
-        _check_explicit_plan(plan, stride)
-    if plan is None:
-        plan = _auto_plan(x_q, w_q, stride, padding)
-    kernel = mm2im_tconv
-    kw = {}
-    if plan is not None:
-        kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
-                  grid_order=plan.grid_order)
-        if plan.method not in (None, "mm2im"):
-            # Same variant-upgrade rule as tconv, through the autotuner's
-            # runner table (these entry points take out_scale, unlike the
-            # registry dispatch signature).  Unknown variants degrade to
-            # the default kernel — a bad cache must never break inference.
-            from repro.core.autotune import KERNEL_RUNNERS
-            kernel = KERNEL_RUNNERS.get(plan.method, mm2im_tconv)
-    return kernel(x_q, w_q, bias_q, stride=stride, padding=padding,
-                  out_scale=out_scale, **kw)
+    ep = Epilogue(bias=bias_q, activation=activation,
+                  out_scale=_norm_out_scale(out_scale))
+    return _dispatch(x_q, w_q, ep, stride=stride, padding=padding,
+                     method=method, plan=registry.as_plan(plan))

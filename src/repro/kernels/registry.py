@@ -6,8 +6,7 @@ pipelined-DMA kernel, a sparse variant, a GPU port) plug in without
 touching the dispatch site, and so the autotuner (``core/autotune.py``)
 can hand any implementation an explicit tile plan.
 
-Two value types live here because every other layer depends on them and
-they must stay import-cycle-free (this module imports only the stdlib):
+Two value types live here because every other layer depends on them:
 
 * :class:`Plan` — an explicit ``(block_oh, block_oc, grid_order)`` tile
   plan, optionally pinning the kernel variant that should execute it
@@ -15,8 +14,12 @@ they must stay import-cycle-free (this module imports only the stdlib):
   dataclass) so it can ride through ``jax.jit`` static arguments; produced
   by ``core/autotune.py`` or built by hand.
 * :class:`KernelSpec` — one registered implementation plus its dispatch
-  capabilities (does it fuse bias/activation, does it accept a Plan, is it
-  differentiable).
+  contract: the single entry point
+  ``fn(x, w, *, stride, padding, epilogue, plan)`` and the declared
+  epilogue capabilities — which PPU stages it fuses (``fuses``, a
+  frozenset over ``core.epilogue.STAGES``), whether it accepts an explicit
+  :class:`Plan`, and whether it computes int8 × int8 natively
+  (``supports_int8``).
 
 Registration happens at import time in ``kernels/ops.py`` for the six
 built-in methods; tests and extensions use :func:`register` /
@@ -32,33 +35,38 @@ A variant is one function with the dispatch signature plus a
 
     @registry.register(
         "my_variant",
-        fuses_bias=True,          # dispatcher skips its own bias add
-        fuses_activation=True,    # dispatcher skips its own activation
-        supports_plan=True,       # accepts an explicit registry.Plan
+        fuses=("bias", "activation"),  # PPU stages the kernel fuses
+        supports_plan=True,            # accepts an explicit registry.Plan
+        supports_int8=True,            # int8 x int8 -> int32 natively
         description="sparse MM2IM with 2:4 weight pruning")
-    def my_variant(x, w, bias, *, stride, padding, activation, plan):
+    def my_variant(x, w, *, stride, padding, epilogue, plan):
+        # epilogue is the already-split kernel part: only stages this
+        # spec declared in `fuses` (plus the final out_dtype cast when
+        # the kernel runs last) ever arrive here.
         ...
         return out_nhwc
 
     out = ops.tconv(x, w, stride=2, method="my_variant")
 
-Declare only the epilogue stages the kernel truly fuses: ``ops.tconv``
-applies whatever the implementation does not fuse, which is what keeps
-every method numerically interchangeable.  A variant with
-``supports_plan=True`` becomes autotunable the moment
-``core/autotune.py``'s measure loop knows how to call it (see
-``core.autotune.KERNEL_RUNNERS``); tuned plans then carry
-``Plan.method = "my_variant"`` and ``ops.tconv`` dispatches back to it
-automatically.  The int8 requant path (``ops.tconv_int8``) bypasses the
-registry signature (it needs ``out_scale``) and honors ``Plan.method``
-via ``KERNEL_RUNNERS`` instead — a variant that should serve tuned int8
-plans must provide a runner there with the ``mm2im_tconv`` signature.
+Declare only the PPU stages the kernel truly fuses: the dispatcher
+(``ops._dispatch``) splits every :class:`~repro.core.epilogue.Epilogue`
+into the fused prefix (handed to the kernel) and the unfused remainder
+(applied by the dispatcher), which is what keeps every method numerically
+interchangeable.  A variant with ``supports_plan=True`` is *autotunable
+with zero extra wiring*: ``core/autotune.py`` measures candidates through
+this registry, tuned plans carry ``Plan.method = "my_variant"``, and both
+``ops.tconv`` and ``ops.tconv_int8`` dispatch back to it automatically.
+A variant without ``supports_int8`` still serves int8 problems — the
+dispatcher runs it through the dequant -> compute -> requant fallback.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
+from typing import (Callable, FrozenSet, Iterable, Optional, Sequence, Tuple,
+                    Union)
+
+from repro.core.epilogue import STAGES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,20 +126,38 @@ def as_plan(plan: PlanLike) -> Optional[Plan]:
 class KernelSpec:
     """One registered TCONV implementation and its dispatch contract.
 
-    ``fn(x, w, bias, *, stride, padding, activation, plan)`` returns the
-    NHWC output.  Implementations that do not fuse bias/activation receive
-    ``bias=None`` / ``activation='none'`` and the dispatcher applies the
-    epilogue itself; implementations with ``supports_plan=False`` receive
-    ``plan=None`` (passing an explicit plan to them is a dispatch error).
+    ``fn(x, w, *, stride, padding, epilogue, plan)`` returns the NHWC
+    output.  ``epilogue`` is the *kernel part* of the requested
+    :class:`~repro.core.epilogue.Epilogue` — the dispatcher has already
+    removed every stage this spec does not declare in ``fuses`` and
+    applies them itself afterwards, so an implementation only ever sees
+    stages it promised to fuse.  Implementations with
+    ``supports_plan=False`` receive ``plan=None`` (passing an explicit
+    plan to them is a dispatch error); implementations without
+    ``supports_int8`` receive float operands even for int8 problems (the
+    dispatcher's dequant -> requant fallback).
     """
 
     name: str
     fn: Callable
-    fuses_bias: bool = False
-    fuses_activation: bool = False
+    fuses: FrozenSet[str] = frozenset()
     supports_plan: bool = False
+    supports_int8: bool = False
     differentiable: bool = True
     description: str = ""
+
+    # Convenience views of the fused-stage set.
+    @property
+    def fuses_bias(self) -> bool:
+        return "bias" in self.fuses
+
+    @property
+    def fuses_activation(self) -> bool:
+        return "activation" in self.fuses
+
+    @property
+    def fuses_requant(self) -> bool:
+        return "requant" in self.fuses
 
 
 _REGISTRY: dict[str, KernelSpec] = {}
@@ -140,23 +166,30 @@ _REGISTRY: dict[str, KernelSpec] = {}
 def register(
     name: str,
     *,
-    fuses_bias: bool = False,
-    fuses_activation: bool = False,
+    fuses: Iterable[str] = (),
     supports_plan: bool = False,
+    supports_int8: bool = False,
     differentiable: bool = True,
     description: str = "",
 ) -> Callable:
     """Decorator: register ``fn`` as TCONV method ``name``.
 
-    Re-registering an existing name replaces it (latest wins) so tests can
-    shadow a built-in and restore it afterwards.
+    ``fuses`` names the PPU epilogue stages the implementation fuses — a
+    subset of ``core.epilogue.STAGES`` (``'bias'``, ``'requant'``,
+    ``'activation'``).  Re-registering an existing name replaces it
+    (latest wins) so tests can shadow a built-in and restore it afterwards.
     """
+    fuses = frozenset(fuses)
+    bad = fuses - set(STAGES)
+    if bad:
+        raise ValueError(
+            f"fuses must be a subset of {STAGES}, got extras {sorted(bad)}")
 
     def deco(fn: Callable) -> Callable:
         _REGISTRY[name] = KernelSpec(
-            name=name, fn=fn, fuses_bias=fuses_bias,
-            fuses_activation=fuses_activation, supports_plan=supports_plan,
-            differentiable=differentiable, description=description)
+            name=name, fn=fn, fuses=fuses, supports_plan=supports_plan,
+            supports_int8=supports_int8, differentiable=differentiable,
+            description=description)
         return fn
 
     return deco

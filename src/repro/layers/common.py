@@ -145,7 +145,8 @@ def init_tconv(key, ks: int, oc: int, ic: int, dtype=jnp.float32,
 
 
 def tconv_layer(params, x, *, stride: int, padding: str = "SAME",
-                method: str = "mm2im", activation: str = "none", plan=None):
+                method: str = "mm2im", activation: str = "none", plan=None,
+                out_scale=None, out_dtype=None):
     """Apply a TCONV layer through the kernel registry.
 
     ``plan`` is an explicit tile plan (``kernels.registry.Plan`` or a
@@ -158,11 +159,21 @@ def tconv_layer(params, x, *, stride: int, padding: str = "SAME",
     preference (``Plan.method``) — applies with no threading here.
     Precedence: explicit ``plan`` > cache hit > heuristic
     (docs/AUTOTUNER.md).
+
+    ``out_scale`` (and optionally ``out_dtype``) attach the PPU requant
+    epilogue stage, making a quantized *inference* layer out of the same
+    call: int8 params/activations run the paper's int8 datapath on
+    kernels that fuse requant, and the dispatcher's dequant -> requant
+    fallback on every other registered method — the layer code does not
+    change either way.  Requantization is not differentiable (round/clip;
+    the paper quantizes frozen models) — keep ``out_scale=None`` on
+    training paths.
     """
     from repro.kernels.ops import tconv
 
     return tconv(x, params["w"], params["b"], stride=stride, padding=padding,
-                 method=method, activation=activation, plan=plan)
+                 method=method, activation=activation, plan=plan,
+                 out_scale=out_scale, out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -116,6 +116,11 @@ def dcgan_generator(params, z, *, method: str = "mm2im", plans=None):
     ``plans`` maps TCONV param names ('t1'..'t4') to explicit tile plans
     (``kernels.registry.Plan``) — see ``dcgan_tconv_problems`` +
     ``core.autotune`` for producing them.
+
+    The output tanh is expressed as the last TCONV's fused activation (the
+    paper's PPU epilogue): the MM2IM kernels apply it before the single
+    HBM store, and the dispatcher applies the identical shared activation
+    for baseline methods — same numbers either way (DESIGN.md §3/§4).
     """
     b = z.shape[0]
     base = params["t1"].shape[3]
@@ -125,9 +130,8 @@ def dcgan_generator(params, z, *, method: str = "mm2im", plans=None):
         x = tconv(x, params[f"t{i}"], params[f"b{i}"], stride=2, method=method,
                   plan=_plan_for(plans, f"t{i}"))
         x = jax.nn.relu(batchnorm(x))
-    x = tconv(x, params["t4"], params["b4"], stride=2, method=method,
-              plan=_plan_for(plans, "t4"))
-    return jnp.tanh(x)
+    return tconv(x, params["t4"], params["b4"], stride=2, method=method,
+                 activation="tanh", plan=_plan_for(plans, "t4"))
 
 
 def dcgan_tconv_layers(params) -> list:
@@ -226,12 +230,14 @@ def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8,
         x = jax.nn.leaky_relu(x, 0.2)
     x = jax.nn.relu(skips[-1])
     for i in range(depth):
+        # The final up-TCONV fuses the output tanh (PPU epilogue).
         x = tconv(x, params[f"d{i}"], params[f"db{i}"], stride=2, method=method,
+                  activation="tanh" if i == depth - 1 else "none",
                   plan=_plan_for(plans, f"d{i}"))
         if i < depth - 1:
             x = batchnorm(x)
             x = jnp.concatenate([jax.nn.relu(x), skips[depth - 2 - i]], -1)
-    return jnp.tanh(x)
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +317,5 @@ def styletransfer(params, img, *, method: str = "mm2im", plans=None):
     x = jax.nn.relu(batchnorm(tconv(x, params["t2"], params["tb2"], stride=2,
                                     method=method,
                                     plan=_plan_for(plans, "t2"))))
-    x = tconv(x, params["out"], params["ob"], stride=1, method=method,
-              plan=_plan_for(plans, "out"))
-    return jnp.tanh(x)
+    return tconv(x, params["out"], params["ob"], stride=1, method=method,
+                 activation="tanh", plan=_plan_for(plans, "out"))

@@ -11,7 +11,10 @@ paper's TCONV models; with no explicit ``plans=`` they resolve each
 generator layer's tile plan from the autotuner's on-disk cache
 (``core/autotune.py``) — tune once with ``autotune_sweep``, and every
 later training or serving process runs the tuned plans (and tuned kernel
-variant, single- vs double-buffered) with zero plan threading.
+variant, single- vs double-buffered) with zero plan threading.  Every
+TCONV here goes through the single Epilogue-typed dispatch pipeline
+(``kernels/ops.py``), so the f32 training steps and the int8 serve path
+share one plan-consumption and variant-upgrade implementation.
 """
 
 from __future__ import annotations

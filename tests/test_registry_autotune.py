@@ -63,7 +63,7 @@ def test_register_custom_kernel_dispatch():
 
     @registry.register("direct_test",
                        description="ref.tconv_direct as a plugin")
-    def _direct(x, w, bias, *, stride, padding, activation, plan):
+    def _direct(x, w, *, stride, padding, epilogue, plan):
         return ref.tconv_direct(x, w, stride=stride, padding=padding)
 
     try:
@@ -79,17 +79,21 @@ def test_register_custom_kernel_dispatch():
 
 def test_mixed_fuse_capabilities_get_full_epilogue():
     """A kernel fusing only one of bias/activation still gets the other
-    applied by the dispatcher (regression: the unfused half was dropped)."""
+    applied by the dispatcher (regression: the unfused half was dropped).
 
-    def _direct(x, w, bias, *, stride, padding, activation, plan):
-        from repro.kernels.mm2im_pallas import _ACTIVATIONS
+    Under the Epilogue-typed contract the kernel receives only the fused
+    *prefix* of present stages — 'fuse_act_only' with a bias present gets
+    an empty kernel epilogue (activation cannot run before the unfused
+    bias add) and the dispatcher applies both stages itself.
+    """
+    from repro.core.epilogue import apply_epilogue
+
+    def _direct(x, w, *, stride, padding, epilogue, plan):
         out = ref.tconv_direct(x, w, stride=stride, padding=padding)
-        if bias is not None:
-            out = out + bias[None, None, None, :]
-        return _ACTIVATIONS[activation](out)
+        return apply_epilogue(out, epilogue)
 
-    registry.register("fuse_bias_only", fuses_bias=True)(_direct)
-    registry.register("fuse_act_only", fuses_activation=True)(_direct)
+    registry.register("fuse_bias_only", fuses=("bias",))(_direct)
+    registry.register("fuse_act_only", fuses=("activation",))(_direct)
     try:
         x, w = _xw()
         b = RNG.standard_normal(4).astype(np.float32)
