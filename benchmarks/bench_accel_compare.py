@@ -16,6 +16,12 @@ PPU epilogue, and the §II-A baselines run through the dispatcher's
 dequant -> compute -> requant fallback (``kernels/ops.py``) — an int8
 baseline comparison that was impossible before the Epilogue-typed
 dispatch unification (only the MM2IM kernels could take ``out_scale``).
+
+A third section models the plan-v2 **batch-folded** dataflow on the
+batch-8 Table II rows: issued-tile MXU utilization and predicted speedup
+of folding the batch into the MatMul M-dimension vs the grid-batch
+dataflow (``tableIII_fold_*`` rows), plus a measured int8 bit-identity
+check of the folded kernel on the batched path.
 """
 
 from __future__ import annotations
@@ -45,6 +51,7 @@ def measured_int8() -> None:
     scale = 0.003
 
     from repro.kernels.ops import tconv_int8
+    from repro.kernels.registry import Plan
 
     outs = {}
     for m in INT8_METHODS:
@@ -61,6 +68,37 @@ def measured_int8() -> None:
             us = time_fn(fn, xq, repeats=3)
             emit(f"tableIII_int8_{m}", us,
                  f"fallback=dequant-requant;max_dev_vs_mm2im={dev}")
+
+    # Plan v2: the batch-folded int8 dataflow must be bit-identical to the
+    # grid-batch kernel on the batched serve path.
+    xq8 = rng.integers(-128, 128, (8, p.ih, p.iw, p.ic)).astype(np.int8)
+    fold = np.asarray(tconv_int8(xq8, wq, bq, scale, stride=p.stride,
+                                 plan=Plan(4, 8, "bcj", fold_batch=True)))
+    grid = np.asarray(tconv_int8(xq8, wq, bq, scale, stride=p.stride,
+                                 plan=Plan(4, 8, "bcj")))
+    emit("tableIII_int8_folded_b8", 0.0,
+         f"bitident_vs_grid={int((fold == grid).all())};"
+         f"native_requant=1;fold_batch=1")
+
+
+def modeled_folded_b8() -> None:
+    """Folded vs grid-batch MXU occupancy on the batch-8 Table II rows.
+
+    The GOPs/DSP analogue under tile quantization: issued-tile utilization
+    of the MM2IM MatMul with the batch folded into M vs one starved
+    product per batch element (the Table II small-spatial GAN layers are
+    exactly where the 128-lane M-dimension runs mostly empty)."""
+    batch = 8
+    for row in TABLE_II:
+        p = row.problem
+        e_grid = perf_model.mm2im_estimate(p, batch, bits=8)
+        e_fold = perf_model.mm2im_estimate(p, batch, bits=8, fold_batch=True)
+        emit(f"tableIII_fold_{row.name}", e_fold.t_overlapped * 1e6,
+             f"batch={batch};grid_util={e_grid.mxu_utilization:.3f};"
+             f"fold_util={e_fold.mxu_utilization:.3f};"
+             f"fold_speedup={e_grid.t_overlapped / e_fold.t_overlapped:.2f}x;"
+             f"grid_bottleneck={e_grid.bottleneck};"
+             f"fold_bottleneck={e_fold.bottleneck}")
 
 
 def main() -> None:
@@ -83,6 +121,7 @@ def main() -> None:
              f"mean_mxu_util={u.mean():.3f};"
              f"rel_time_vs_mm2im={t.mean() / np.array([v[0] for v in agg['mm2im']]).mean():.2f}x")
 
+    modeled_folded_b8()
     measured_int8()
 
 

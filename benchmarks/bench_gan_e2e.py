@@ -42,6 +42,24 @@ def modeled_e2e(layers, name: str) -> None:
          f"paper_tconv_speedup=2.4-3.0x")
 
 
+def modeled_folded_e2e(layers, name: str, batch: int = 8) -> None:
+    """Batch-8 generator TCONV stack: grid-batch vs batch-folded MM2IM.
+
+    Per-layer tile-quantized roofline summed over the stack — the serve
+    path's modeled payoff of the plan-v2 fold (the small-spatial head
+    layers dominate the win; the late large-spatial layers already fill
+    the MXU M-dimension and fold to ~1x)."""
+    t_grid = t_fold = 0.0
+    for (oc, ks, ih, ic, s) in layers:
+        p = TConvProblem(ih, ih, ic, ks, oc, s)
+        t_grid += perf_model.mm2im_estimate(p, batch, bits=8).t_overlapped
+        t_fold += perf_model.mm2im_estimate(p, batch, bits=8,
+                                            fold_batch=True).t_overlapped
+    emit(f"tableIV_modeled_{name}_b{batch}_folded", t_fold * 1e6,
+         f"grid_us={t_grid * 1e6:.0f};"
+         f"fold_speedup={t_grid / t_fold:.2f}x")
+
+
 def measured_cpu() -> None:
     key = jax.random.PRNGKey(0)
     # DCGAN (1/8 width) — all methods must agree.
@@ -61,6 +79,30 @@ def measured_cpu() -> None:
             us = time_fn(fn, z, repeats=3)
             emit(f"tableIV_dcgan_cpu_{m}", us,
                  f"max_dev_vs_mm2im={np.abs(outs[m]-outs['mm2im']).max():.2e}")
+    # Batch-folded DCGAN at batch 8: every TCONV runs under a fold_batch
+    # plan — the e2e output must be bit-identical to the grid-batch run
+    # (plan consumption must never change results), and the wall-time
+    # ratio is the measured serve-path payoff of the fold.
+    from repro.core import tiling
+    from repro.kernels.registry import Plan
+
+    z8 = jax.random.normal(jax.random.PRNGKey(4), (8, 100))
+    fold_plans = {}
+    for lname, prob in gan.dcgan_tconv_problems(p).items():
+        tp = tiling.plan(prob, batch=8, fold_batch=True)
+        fold_plans[lname] = Plan(tp.block_oh, tp.block_oc, tp.grid_order,
+                                 fold_batch=True)
+    fn_grid = jax.jit(lambda zz: gan.dcgan_generator(p, zz))
+    fn_fold = jax.jit(lambda zz: gan.dcgan_generator(p, zz, plans=fold_plans))
+    out_grid = np.asarray(fn_grid(z8))
+    out_fold = np.asarray(fn_fold(z8))
+    us_grid = time_fn(fn_grid, z8, repeats=3)
+    us_fold = time_fn(fn_fold, z8, repeats=3)
+    emit("tableIV_dcgan_cpu_b8_folded", us_fold,
+         f"bitident_vs_grid={int((out_fold == out_grid).all())};"
+         f"grid_us={us_grid:.1f};"
+         f"fold_speedup={us_grid / max(us_fold, 1e-9):.2f}x")
+
     # pix2pix (depth 5, 1/8 width).
     pp, _ = gan.init_pix2pix_g(jax.random.PRNGKey(2), depth=5, scale_down=8)
     x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32, 3))
@@ -80,6 +122,8 @@ def main() -> None:
           if r.name.startswith("DCGAN")]
     modeled_e2e(dc, "dcgan")
     modeled_e2e(PIX2PIX_TCONVS, "pix2pix")
+    modeled_folded_e2e(dc, "dcgan")
+    modeled_folded_e2e(PIX2PIX_TCONVS, "pix2pix")
     measured_cpu()
 
 

@@ -53,7 +53,9 @@ def main() -> None:
         emit(f"V-F_zero_insertion_{p.ih}x{p.ic}x{p.ks}s{p.stride}", 0.0,
              f"model={want:.3e};xla={got:.3e};ratio={got/want:.3f}")
 
-        # MM2IM issued MACs: formula vs explicit grid-geometry count.
+        # MM2IM issued tile-MACs: formula vs explicit grid-geometry count
+        # (ceil-quantized to whole 128^3 MXU tiles per launch — the same
+        # quantization batch folding exploits).
         est = perf_model.mm2im_estimate(p, batch=1, bits=8)
         block_oh, block_oc = plan_blocks(p.ih, p.iw, p.ic, p.ks, p.oc,
                                          p.stride, p.padding, in_bytes=1)
@@ -65,7 +67,9 @@ def main() -> None:
         n_slab = bi + delta + eps + 1
         n_j = -(-p.oh // block_oh)
         n_c = -(-p.oc // block_oc)
-        manual = n_c * n_j * (n_slab * p.iw) * (p.ks ** 2 * block_oc) * p.ic
+        mxu = perf_model.V5E.mxu_dim
+        manual = n_c * n_j * perf_model.mxu_tiles(
+            n_slab * p.iw, p.ks ** 2 * block_oc, p.ic, mxu) * mxu ** 3
         emit(f"V-F_mm2im_issued_{p.ih}x{p.ic}x{p.ks}s{p.stride}", 0.0,
              f"model={est.issued_macs};manual={manual};"
              f"match={est.issued_macs == manual}")

@@ -5,7 +5,11 @@
 Emits ``name,us_per_call,derived`` CSV lines (stdout).  ``--json`` also
 writes every emitted row (plus run metadata: backend, jax version,
 timestamp) to a JSON file — the machine-readable perf-trajectory artifact
-CI records per commit (``BENCH_autotune.json`` for the autotune slice).
+CI records per commit (``BENCH_autotune.json`` for the autotune slice) —
+and additionally distills a compact repo-root ``BENCH_mm2im.json``
+(per-method timings, modeled MXU utilization incl. folded-vs-grid, and
+the autotune tier hit-rates) so the MM2IM perf trajectory has a single
+small file to diff across commits.
 """
 
 from __future__ import annotations
@@ -15,6 +19,9 @@ import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 MODULES = [
     ("drop_rates", "benchmarks.bench_drop_rates"),            # Fig. 1 / 7
@@ -27,6 +34,64 @@ MODULES = [
     ("autotune", "benchmarks.bench_autotune"),                # tuned vs default plans
     ("scale_roofline", "benchmarks.bench_scale_roofline"),    # §Roofline
 ]
+
+
+def _parse_derived(derived: str) -> dict:
+    """'k=v;k=v' derived strings -> dict (values kept as strings)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def mm2im_summary(rows: list) -> dict:
+    """Distill the emitted rows into the compact MM2IM trajectory doc.
+
+    Three sections, each present when its source ran (plus an
+    always-available modeled section, so even an ``--only autotune`` run
+    seeds a non-empty trajectory):
+
+    * ``methods`` — per-method mean timing + modeled MXU utilization from
+      the ``tableIII_summary_*`` rows;
+    * ``autotune`` — every ``autotune*`` row verbatim (tuned-vs-default,
+      sb-vs-db and folded-vs-grid head-to-heads);
+    * ``tier_hits`` — the parsed ``autotune_tier_hits`` attribution;
+    * ``modeled_fold`` — tile-quantized folded-vs-grid utilization on the
+      batch-8 Table II rows straight from ``core/perf_model`` (no
+      benchmarking required, so the field never goes empty).
+    """
+    methods = {}
+    autotune_rows = []
+    tier_hits = None
+    for r in rows:
+        name = r["name"]
+        if name.startswith("tableIII_summary_"):
+            d = _parse_derived(r["derived"])
+            entry = {"us": r["us_per_call"]}
+            if "mean_mxu_util" in d:
+                entry["mean_mxu_util"] = float(d["mean_mxu_util"])
+            methods[name[len("tableIII_summary_"):]] = entry
+        elif name == "autotune_tier_hits":
+            tier_hits = _parse_derived(r["derived"])
+        elif name.startswith("autotune"):
+            autotune_rows.append(r)
+
+    from repro.configs.paper_models import TABLE_II
+    from repro.core.perf_model import mm2im_estimate
+
+    modeled = {}
+    for row in TABLE_II:
+        g = mm2im_estimate(row.problem, 8, bits=8)
+        f = mm2im_estimate(row.problem, 8, bits=8, fold_batch=True)
+        modeled[row.name] = {
+            "grid_mxu_util": round(g.mxu_utilization, 4),
+            "fold_mxu_util": round(f.mxu_utilization, 4),
+            "fold_speedup": round(g.t_overlapped / f.t_overlapped, 3),
+        }
+    return {"methods": methods, "autotune": autotune_rows,
+            "tier_hits": tier_hits, "modeled_fold_b8": modeled}
 
 
 def main() -> None:
@@ -70,6 +135,22 @@ def main() -> None:
             f.write("\n")
         print(f"# wrote {len(doc['rows'])} rows to {args.json}",
               file=sys.stderr)
+
+        # Compact MM2IM trajectory file at the repo root — the per-commit
+        # artifact CI uploads next to BENCH_autotune.json.
+        compact = {
+            "schema": 1,
+            "created": doc["created"],
+            "backend": doc["backend"],
+            "jax": doc["jax"],
+            "modules": ran,
+        }
+        compact.update(mm2im_summary(doc["rows"]))
+        mm2im_path = REPO_ROOT / "BENCH_mm2im.json"
+        with open(mm2im_path, "w") as f:
+            json.dump(compact, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote MM2IM trajectory to {mm2im_path}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -75,11 +75,22 @@ from repro.kernels.registry import Plan
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = "~/.cache/repro/autotune_cache.json"
+# Deliberately still 1 although plans now serialize the v2 fold_batch
+# field: bumping would make every existing user cache read as empty
+# (_read_disk discards version mismatches).  A pre-fold reader sharing a
+# new cache ignores the unknown field and runs the tuned geometry
+# unfolded — bit-identical results, possibly suboptimal speed — which is
+# the cheaper failure than discarding all prior tuning.  The *shipped
+# tables* (immutable release artifacts) do gate the field via their own
+# version bump (core/plan_table.py).
 _CACHE_VERSION = 1
 
 # method name -> roofline estimator used by the pruning stage.  Methods
 # without an entry (third-party variants) rank with the single-buffered
 # estimate — measurement, not the model, decides the winner anyway.
+# Estimators take (p, batch, *, block_oh, block_oc, bits, grid_order, hw,
+# fold_batch) — the plan-v2 ``fold_batch`` kwarg is part of the contract
+# since candidates are ranked folded vs grid-batch a priori.
 METHOD_ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
@@ -289,7 +300,10 @@ def measure_plan(p: TConvProblem, plan: Plan, *, batch: int = 1,
     method = plan.method or "mm2im"
     bias, out_scale = measure_epilogue(p, dtype)
     ep = Epilogue(bias=bias, out_scale=out_scale)
-    geom = Plan(plan.block_oh, plan.block_oc, plan.grid_order)
+    # Strip the method (it is dispatched explicitly above) but keep the
+    # fold_batch knob — a folded candidate must be timed folded.
+    geom = Plan(plan.block_oh, plan.block_oc, plan.grid_order,
+                fold_batch=plan.fold_batch)
 
     fn = jax.jit(lambda xx, ww: kernel_ops.run_registered(
         method, xx, ww, stride=p.stride, padding=p.padding, epilogue=ep,
@@ -312,7 +326,8 @@ def default_plan(p: TConvProblem, *, batch: int = 1, dtype=jnp.float32,
                  hw: HW = V5E) -> Plan:
     """The seed heuristic's choice, as an explicit Plan."""
     tp = tiling.plan(p, batch=batch, bits=_bits(dtype), hw=hw)
-    return Plan(tp.block_oh, tp.block_oc, tp.grid_order, tp.method)
+    return Plan(tp.block_oh, tp.block_oc, tp.grid_order, tp.method,
+                tp.fold_batch)
 
 
 def autotune_result(
@@ -351,24 +366,30 @@ def autotune_result(
 
     bits = _bits(dtype)
     cands = tiling.candidate_plans(p, batch=batch, bits=bits, hw=hw)
-    plans = [Plan(c.block_oh, c.block_oc, c.grid_order, c.method)
+    plans = [Plan(c.block_oh, c.block_oc, c.grid_order, c.method,
+                  c.fold_batch)
              for c in cands]
     if dflt not in plans:
         plans.append(dflt)
 
-    # Prune by the analytical roofline (overlapped-copy term included, so
-    # single- and double-buffered candidates rank against each other); keep
+    # Prune by the analytical roofline (overlapped-copy term + MXU tile
+    # quantization included, so single- vs double-buffered and folded vs
+    # grid-batch candidates all rank against each other a priori); keep
     # the default in the field so the measurement is always at least a
     # default-vs-challenger comparison.
     def score(pl: Plan) -> float:
         est = METHOD_ESTIMATORS.get(pl.method or "mm2im", mm2im_estimate)
         return est(p, batch, block_oh=pl.block_oh, block_oc=pl.block_oc,
-                   bits=bits, grid_order=pl.grid_order, hw=hw).t_overlapped
+                   bits=bits, grid_order=pl.grid_order, hw=hw,
+                   fold_batch=pl.fold_batch).t_overlapped
 
     ranked = sorted(plans, key=score)
-    survivors = ranked[:max(max_measure - 1, 1)]
+    # Up to max_measure survivors, always including the default: when the
+    # model already ranks the default on top, the remaining slots go to
+    # challengers instead of shrinking the field to a self-comparison.
+    survivors = ranked[:max(max_measure, 1)]
     if dflt not in survivors:
-        survivors.append(dflt)
+        survivors = survivors[:max(max_measure - 1, 1)] + [dflt]
 
     timed = {pl: measure_plan(p, pl, batch=batch, dtype=dtype,
                               repeats=repeats) for pl in survivors}

@@ -85,7 +85,18 @@ class Estimate:
 
     @property
     def bottleneck(self) -> str:
-        terms = {"compute": self.t_compute, "memory": self.t_memory,
+        """Dominant term of the overlapped bound.
+
+        ``t_fill`` competes as its own term: it is the non-overlappable
+        slice of ``t_memory``, so the memory term here is the *remainder*
+        (what compute can hide).  A fill-dominated problem reports
+        ``'fill'`` — previously it was misattributed to plain
+        ``'memory'``, hiding that the cure is pipelining (the db variant),
+        not less traffic.
+        """
+        terms = {"compute": self.t_compute,
+                 "memory": self.t_memory - self.t_fill,
+                 "fill": self.t_fill,
                  "collective": self.t_collective}
         return max(terms, key=terms.get)
 
@@ -99,6 +110,18 @@ def _dtype_peak(hw: HW, bits: int) -> float:
     return hw.peak_flops_int8 if bits == 8 else hw.peak_flops_bf16
 
 
+def mxu_tiles(m: int, n: int, k: int, mxu: int) -> int:
+    """Issued MXU tiles for an (m, k) @ (k, n) product.
+
+    The systolic array computes whole ``mxu x mxu`` tiles: a matmul with
+    ``m < mxu`` rows issues the same tile row as one with ``m == mxu``
+    rows.  This quantization is exactly what batch folding exploits — the
+    folded M-dimension packs ``B`` starved row slabs into the tiles the
+    grid-batch dataflow would issue ``B`` times over.
+    """
+    return -(-m // mxu) * (-(-n // mxu)) * (-(-k // mxu))
+
+
 def mm2im_estimate(
     p: TConvProblem,
     batch: int = 1,
@@ -109,6 +132,8 @@ def mm2im_estimate(
     grid_order: str = "auto",
     hw: HW = V5E,
     double_buffered: bool = False,
+    fold_batch: bool = False,
+    requant: Optional[bool] = None,
 ) -> Estimate:
     """Model the fused Pallas MM2IM kernel's dataflow exactly.
 
@@ -117,6 +142,19 @@ def mm2im_estimate(
     ``double_buffered=True`` models ``kernels/mm2im_db_pallas`` (two-slot
     slab pipeline: fill shrinks to one slab copy, but every row block
     re-reads its halo rows from HBM).
+
+    ``t_compute`` counts **issued MXU tiles** (:func:`mxu_tiles` — the
+    ``ceil(M/128)·ceil(N/128)·ceil(K/128)`` quantization of the systolic
+    array), not raw MACs, so a starved M-dimension costs what it costs on
+    the hardware.  ``fold_batch=True`` models the plan-v2 folded dataflow:
+    M grows to ``B·n_slab·Iw`` and the per-batch grid multiplicity
+    disappears — this is what lets the autotuner rank folded vs grid-batch
+    candidates a priori.
+
+    ``requant`` selects the output store width for int8 problems: the
+    paper's requantizing mode stores int8 (1 byte), int8 *without* a
+    requant epilogue stores the int32 accumulator (4 bytes).  ``None``
+    defaults to requantizing when ``bits == 8`` (the paper's precision).
     """
     from repro.kernels.mm2im_pallas import plan_blocks  # avoid cycle
 
@@ -140,8 +178,15 @@ def mm2im_estimate(
     oc_p = n_c * block_oc
     ihp = (n_j - 1) * bi + n_slab
 
-    # MXU work actually issued (halo overlap + Oc padding included).
-    issued = batch * n_c * n_j * (n_slab * p.iw) * (p.ks**2 * block_oc) * p.ic
+    # MXU work actually issued, tile-quantized (halo overlap + Oc padding
+    # + M/N/K tile padding included).  Folded: one (B*n_slab*Iw, Ic)
+    # product per (j, c) cell; grid-batch: B starved (n_slab*Iw, Ic)
+    # products.  mxu_utilization is the GOPs/DSP analogue: the effectual
+    # fraction of the dense tile work the systolic array actually clocks.
+    m_rows = (batch if fold_batch else 1) * n_slab * p.iw
+    tiles = mxu_tiles(m_rows, p.ks**2 * block_oc, p.ic, hw.mxu_dim)
+    n_launches = n_c * n_j * (1 if fold_batch else batch)
+    issued = n_launches * tiles * hw.mxu_dim**3
     eff = drop_stats(p)["effectual_macs"] * batch
 
     # HBM traffic under the chosen grid order (resident-block model).
@@ -152,10 +197,23 @@ def mm2im_estimate(
         x_bytes_once = n_j * slab_bytes
     else:
         x_bytes_once = ihp * p.iw * p.ic * ebytes
-    out_bytes = batch * n_j * block_oh * (-(-p.ow // s) * s) * oc_p * (1 if bits == 8 else 4)
+    # Output store width follows the epilogue: the paper's int8 mode
+    # requantizes to int8 (1 byte); int8 WITHOUT requant stores the int32
+    # accumulator (4 bytes) — previously mis-modeled as 1 byte.
+    if requant is None:
+        requant = bits == 8
+    out_store = 1 if (bits == 8 and requant) else 4
+    out_bytes = batch * n_j * block_oh * (-(-p.ow // s) * s) * oc_p * out_store
     if grid_order == "auto":
         grid_order = "cbj" if w_bytes > batch * x_bytes_once else "bcj"
-    if double_buffered:
+    if fold_batch:
+        # Folding removes the per-batch grid multiplicity: weights are
+        # fetched once, and the batch-concatenated input lands once for
+        # the single-buffered kernel (resident across the (c, j) sweep) or
+        # once per oc-block for the pipeline (slabs re-DMA'd per cell).
+        hbm = (w_bytes + (n_c if double_buffered else 1) * batch
+               * x_bytes_once + out_bytes)
+    elif double_buffered:
         # The pipeline never keeps x resident: every (batch, oc-block) grid
         # cell re-DMAs all its slabs from HBM under BOTH grid orders, so
         # the x term always carries the n_c multiplicity; grid order only
@@ -170,7 +228,10 @@ def mm2im_estimate(
     # Overlapped-copy term: what the compute pipeline cannot hide.  The
     # single-buffered kernel stalls until the whole padded input landed in
     # VMEM; the double-buffered pipeline stalls only for its first slab.
-    fill_bytes = slab_bytes if double_buffered else ihp * p.iw * p.ic * ebytes
+    # Folded variants move batch-concatenated blocks, so the fill scales
+    # with B either way.
+    fill_once = slab_bytes if double_buffered else ihp * p.iw * p.ic * ebytes
+    fill_bytes = (batch if fold_batch else 1) * fill_once
 
     return Estimate(
         method="mm2im_db" if double_buffered else "mm2im",
@@ -190,9 +251,15 @@ def mm2im_db_estimate(p: TConvProblem, batch: int = 1, **kw) -> Estimate:
 
 def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
                          hw: HW = V5E) -> Estimate:
-    """Unfused IOM: dense MatMul -> HBM intermediate -> col2im scatter pass."""
+    """Unfused IOM: dense MatMul -> HBM intermediate -> col2im scatter pass.
+
+    The MatMul is tile-quantized like the MM2IM family's (same MXU, same
+    starved-M penalty for small images) so cross-method modeled speedups
+    compare equal model fidelities — one ``(Ih·Iw, Ic) @ (Ic, Ks²·Oc)``
+    launch per batch element.
+    """
     ebytes = bits // 8
-    macs = batch * p.macs
+    macs = (batch * mxu_tiles(p.m, p.n, p.k, hw.mxu_dim) * hw.mxu_dim**3)
     inter = batch * p.m * p.n * 4  # f32/i32 partial-product matrix
     hbm = (batch * p.m * p.k * ebytes + p.k * p.n * ebytes  # mm reads
            + inter                                            # mm write
@@ -210,6 +277,10 @@ def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
 
 def zero_insertion_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
                             hw: HW = V5E) -> Estimate:
+    """§II-A method (i).  Direct-conv dataflow: raw dense MAC count (the
+    paper's convention) — XLA's implicit-im2col conv tiling differs from a
+    plain matmul's, so no MXU tile quantization is applied here (a modeled
+    lower bound on compute time, same for :func:`tdc_estimate`)."""
     macs = batch * zero_insertion_macs(p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding)
     ebytes = bits // 8
     sd = p.stride * (p.ih - 1) + 1

@@ -17,11 +17,17 @@ and vice versa.  The file format is the :class:`PlanCache` schema plus a
 required ``provenance`` block recording how the table was produced::
 
     {
-      "version": 1,
+      "version": 2,
       "provenance": {"backend": "tpu", "jax": "0.4.37", "repeats": 5,
                      "created": 1754012345.0, "note": "full 261 sweep"},
       "entries": {"tconv:ih8:...|float32|tpu-v5e|b1": {"plan": {...}, ...}}
     }
+
+Schema v2 adds the per-plan ``fold_batch`` field (batch folded into the
+MatMul M-dimension); v1 tables still load leniently
+(:data:`SUPPORTED_TABLE_VERSIONS`) with their plans read as unfolded, but
+a v1 table *carrying* ``fold_batch`` fails validation — the field is
+gated to version 2 so pre-fold readers never silently drop it.
 
 Tables are **read-only**: nothing in the runtime ever writes one.  The
 tune -> export -> commit workflow lives in ``tools/tune_sweep.py``; CI
@@ -43,7 +49,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.kernels.registry import Plan
 
 TABLE_DIR_ENV = "REPRO_PLAN_TABLE_DIR"
-TABLE_VERSION = 1  # same on-disk version as PlanCache entries
+#: Current table schema.  v2 adds the per-plan ``fold_batch`` field
+#: (batch folded into the MatMul M-dimension — kernels/registry.Plan).
+TABLE_VERSION = 2
+#: Versions the loader accepts.  v1 tables (no ``fold_batch`` anywhere)
+#: keep loading leniently so committed pre-fold tables and site tables
+#: survive the schema bump; their plans read back as unfolded.
+SUPPORTED_TABLE_VERSIONS = (1, 2)
 
 #: provenance keys every shipped table must carry (tools/tune_sweep.py
 #: --export writes them; validate_table_json enforces them).
@@ -87,18 +99,23 @@ def available_backends(directory: Union[str, Path, None] = None
 def validate_table_json(raw: object, *, source: str = "table") -> List[str]:
     """Schema-check one parsed table; returns problems (empty == valid).
 
-    Enforced: the version tag, the :data:`REQUIRED_PROVENANCE` block, the
-    ``tconv:...|dtype|hw|bN`` key shape, and that every entry's ``plan``
-    round-trips through :class:`~repro.kernels.registry.Plan` (positive
-    blocks, known grid order).  Timing metadata (``us`` etc.) is optional
-    but must be numeric when present.
+    Enforced: the version tag (any of
+    :data:`SUPPORTED_TABLE_VERSIONS` — v1 loads leniently), the
+    :data:`REQUIRED_PROVENANCE` block, the ``tconv:...|dtype|hw|bN`` key
+    shape, and that every entry's ``plan`` round-trips through
+    :class:`~repro.kernels.registry.Plan` (positive blocks, known grid
+    order).  The v2 ``fold_batch`` plan field is *gated*: a table claiming
+    ``version: 1`` must not carry it (old readers would silently drop the
+    fold and run a geometry the plan was never timed at).  Timing metadata
+    (``us`` etc.) is optional but must be numeric when present.
     """
     errs: List[str] = []
     if not isinstance(raw, dict):
         return [f"{source}: top level must be an object, got {type(raw).__name__}"]
-    if raw.get("version") != TABLE_VERSION:
-        errs.append(f"{source}: version must be {TABLE_VERSION}, "
-                    f"got {raw.get('version')!r}")
+    version = raw.get("version")
+    if version not in SUPPORTED_TABLE_VERSIONS:
+        errs.append(f"{source}: version must be one of "
+                    f"{SUPPORTED_TABLE_VERSIONS}, got {version!r}")
     prov = raw.get("provenance")
     if not isinstance(prov, dict):
         errs.append(f"{source}: missing 'provenance' object")
@@ -124,6 +141,17 @@ def validate_table_json(raw: object, *, source: str = "table") -> List[str]:
             Plan.from_json(entry["plan"])
         except Exception as e:  # noqa: BLE001 — report, don't raise
             errs.append(f"{where}: bad plan {entry['plan']!r} ({e})")
+        else:
+            if version == 1:
+                # The exporter writes the field into both plan dicts, so
+                # the v1 gate must inspect both.
+                for field in ("plan", "default_plan"):
+                    if isinstance(entry.get(field), dict) \
+                            and "fold_batch" in entry[field]:
+                        errs.append(
+                            f"{where}: {field!r} carries 'fold_batch', a "
+                            f"schema-v2 field — stamp the table version 2 "
+                            f"(tools/tune_sweep.py --export does)")
         for f in ("us", "default_us"):
             if f in entry and not isinstance(entry[f], (int, float)):
                 errs.append(f"{where}: {f!r} must be numeric")

@@ -35,11 +35,12 @@ class TilePlan:
     vmem_bytes: int
     halo_overhead: float  # recomputed-slab fraction vs ideal (dense-MXU cost)
     method: str = "mm2im"  # kernel variant: 'mm2im' | 'mm2im_db'
+    fold_batch: bool = False  # plan v2: batch folded into the MatMul M-dim
 
     def describe(self) -> str:
         p = self.problem
         return (f"tconv({p.ih},{p.iw},{p.ic},{p.ks},{p.oc},{p.stride}) "
-                f"[{self.method}] "
+                f"[{self.method}{'+fold' if self.fold_batch else ''}] "
                 f"block_oh={self.block_oh} block_oc={self.block_oc} "
                 f"slab={self.n_slab} grid={self.grid_order} "
                 f"vmem={self.vmem_bytes/2**20:.2f}MiB halo=+{self.halo_overhead:.0%}")
@@ -60,7 +61,8 @@ def _geometry(p: TConvProblem, block_oh: int):
 
 
 def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
-               *, bits: int = 8, method: str = "mm2im") -> int:
+               *, bits: int = 8, method: str = "mm2im",
+               batch: int = 1, fold_batch: bool = False) -> int:
     """Modeled VMEM footprint of one grid cell.
 
     ``'mm2im'`` keeps the whole padded input resident
@@ -68,23 +70,31 @@ def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
     slab + output scratch of the DMA pipeline (``mm2im_db_pallas``), which
     is what lets the double-buffered variant run blocks the single-buffered
     kernel cannot fit.
+
+    ``fold_batch=True`` multiplies the batch-concatenated residencies by
+    ``batch``: the folded single-buffered kernel holds the whole
+    ``(B, Ihp, Iw, Ic)`` input block, the folded pipeline two
+    ``(B, n_slab, Iw, Ic)`` slab slots, and both hold the ``B``-deep
+    folded MatMul product and output block — this is the per-variant
+    budget that gates ``fold_batch`` candidates in :func:`candidate_plans`.
     """
     ebytes = bits // 8
     _, n_slab, _, ihp, ow_p = _geometry(p, block_oh)
+    bmul = batch if fold_batch else 1
     if method == "mm2im_db":
-        x_resident = 2 * n_slab * p.iw * p.ic * ebytes      # two slab slots
+        x_resident = 2 * bmul * n_slab * p.iw * p.ic * ebytes  # slab slots
     else:
-        x_resident = ihp * p.iw * p.ic * ebytes             # whole input
+        x_resident = bmul * ihp * p.iw * p.ic * ebytes         # whole input
     return (x_resident
-            + p.ic * p.ks**2 * block_oc * ebytes            # weight block
-            + 2 * n_slab * p.iw * p.ks**2 * block_oc * 4    # mm + acc dbl-buf
-            + 2 * block_oh * ow_p * block_oc * 4)           # out blocks/slots
+            + p.ic * p.ks**2 * block_oc * ebytes               # weight block
+            + 2 * bmul * n_slab * p.iw * p.ks**2 * block_oc * 4  # mm + acc
+            + 2 * bmul * block_oh * ow_p * block_oc * 4)       # out blocks
 
 
 def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
          block_oh: Optional[int] = None, block_oc: Optional[int] = None,
          grid_order: Optional[str] = None,
-         method: str = "mm2im") -> TilePlan:
+         method: str = "mm2im", fold_batch: bool = False) -> TilePlan:
     """Tile plan for ``p`` — heuristic by default, explicit when overridden.
 
     Passing ``block_oh``/``block_oc`` (and optionally ``grid_order`` /
@@ -94,9 +104,12 @@ def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
     """
     ebytes = bits // 8
     if block_oh is None or block_oc is None:
+        # plan_blocks owns the folded-budget rule (B-deep residency =>
+        # budget/B): heuristic folded blocks fit VMEM with the fold on.
         h_oh, h_oc = plan_blocks(
             p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
-            vmem_budget=int(hw.vmem_bytes * 0.75), in_bytes=ebytes)
+            vmem_budget=int(hw.vmem_bytes * 0.75), in_bytes=ebytes,
+            batch=batch, fold_batch=fold_batch)
         block_oh = block_oh if block_oh is not None else h_oh
         block_oc = block_oc if block_oc is not None else h_oc
     s = p.stride
@@ -111,10 +124,11 @@ def plan(p: TConvProblem, *, batch: int = 1, bits: int = 8, hw: HW = V5E,
         x_bytes = batch * ihp * p.iw * p.ic * ebytes
         grid_order = "cbj" if w_bytes > x_bytes else "bcj"
 
-    vmem = vmem_bytes(p, block_oh, block_oc, bits=bits, method=method)
+    vmem = vmem_bytes(p, block_oh, block_oc, bits=bits, method=method,
+                      batch=batch, fold_batch=fold_batch)
     halo = (n_j * n_slab) / max(p.ih, 1) - 1.0
     return TilePlan(p, block_oh, block_oc, n_slab, n_j, n_c, grid_order,
-                    vmem, max(halo, 0.0), method)
+                    vmem, max(halo, 0.0), method, fold_batch)
 
 
 # Candidate grids mirror plan_blocks' search space; the autotuner measures
@@ -148,7 +162,8 @@ def candidate_plans(
     vmem_fraction: float = 0.75,
     methods: Optional[tuple] = None,
 ) -> List[TilePlan]:
-    """Every legal (method, block_oh, block_oc, grid_order) under the budget.
+    """Every legal (method, block_oh, block_oc, grid_order, fold) under
+    the budget.
 
     This is the autotuner's enumeration stage (paper Alg. 1 evaluated
     per-problem instead of once): all stride-aligned output-row blocks that
@@ -159,6 +174,13 @@ def candidate_plans(
     two row blocks to overlap, the double-buffered variant is skipped.
     Each variant is budget-filtered under its *own* VMEM residency model,
     so 'mm2im_db' legally reaches block geometries 'mm2im' cannot hold.
+
+    For ``batch > 1`` each geometry is additionally enumerated with
+    ``fold_batch=True`` where the ``B``-deep folded residency still fits
+    the budget (plan v2 — batch collapsed into the MatMul M-dimension).
+    Folded plans carry a single canonical ``'bcj'`` grid order: the
+    bcj/cbj distinction collapses with the batch grid axis, so enumerating
+    both would measure the same program twice.
     Deduplicated; order is deterministic.
     """
     if methods is None:
@@ -168,6 +190,7 @@ def candidate_plans(
     seen = set()
     out: List[TilePlan] = []
     bocs = sorted({min(p.oc, b) for b in _CAND_BOC})
+    folds = (False,) if batch <= 1 else (False, True)
     for bi in _CAND_BI:
         block_oh = s * bi
         if block_oh > max(p.oh, s):
@@ -177,17 +200,20 @@ def candidate_plans(
             for method in methods:
                 if method == "mm2im_db" and n_j < 2:
                     continue  # nothing to pipeline against
-                if vmem_bytes(p, block_oh, boc, bits=bits,
-                              method=method) > budget:
-                    continue
-                for order in ("bcj", "cbj"):
-                    key = (method, block_oh, boc, order)
-                    if key in seen:
+                for fold in folds:
+                    if vmem_bytes(p, block_oh, boc, bits=bits, method=method,
+                                  batch=batch, fold_batch=fold) > budget:
                         continue
-                    seen.add(key)
-                    out.append(plan(p, batch=batch, bits=bits, hw=hw,
-                                    block_oh=block_oh, block_oc=boc,
-                                    grid_order=order, method=method))
+                    orders = ("bcj",) if fold else ("bcj", "cbj")
+                    for order in orders:
+                        key = (method, block_oh, boc, order, fold)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        out.append(plan(p, batch=batch, bits=bits, hw=hw,
+                                        block_oh=block_oh, block_oc=boc,
+                                        grid_order=order, method=method,
+                                        fold_batch=fold))
     return out
 
 

@@ -48,6 +48,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.mm2im_pallas import (
     MM2IMPrep,
     col2im_accumulate,
+    grid_semantics,
     matmul_slab,
     ppu_epilogue,
     prepare_mm2im,
@@ -142,6 +143,88 @@ def _mm2im_db_kernel(
         out_dma((n_j - 1) % _N_SLOTS, n_j - 1).wait()
 
 
+def _mm2im_db_folded_kernel(
+    x_hbm_ref, w_ref, b_ref, s_ref, o_hbm_ref,   # operands (x/o in ANY/HBM)
+    slab_ref, outb_ref, *sems,                   # two-slot scratch (+ sems)
+    b: int, n_j: int, block_oh: int, oc_p: int, async_copies: bool,
+    s: int, ks: int, ct: int, cl: int, bi: int, n_slab: int, iw: int,
+    ow: int, ow_p: int, boc: int, delta: int, acc_dtype, out_dtype,
+    activation: str, out_scale, per_channel: bool,
+):
+    """Batch-folded grid cell: ALL row blocks of one oc-block, all batches.
+
+    Same two-slot pipeline as :func:`_mm2im_db_kernel`, but each in-DMA
+    fetches the *batch-concatenated* slab ``x[:, j*bi : j*bi+n_slab]``
+    (shape ``(B, n_slab, Iw, Ic)``) into one slot, the MatMul folds it
+    into a single ``(B·n_slab·Iw, Ic)`` MXU product, and col2im + the PPU
+    epilogue run per batch element over views of the folded product (the
+    unfolded reduction order, so bit-identical — docs/DESIGN.md §2.5).
+    The grid drops both the batch axis and the row-block axis:
+    ``grid = (oc-blocks,)``.
+    """
+    csel = pl.program_id(0)
+    if async_copies:
+        in_sem, out_sem = sems
+
+    def in_dma(slot, j):
+        return pltpu.make_async_copy(
+            x_hbm_ref.at[:, pl.dslice(j * bi, n_slab)],
+            slab_ref.at[slot],
+            in_sem.at[slot])
+
+    def out_dma(slot, j):
+        return pltpu.make_async_copy(
+            outb_ref.at[slot],
+            o_hbm_ref.at[:, pl.dslice(j * block_oh, block_oh), :,
+                         pl.dslice(csel * boc, boc)],
+            out_sem.at[slot])
+
+    if async_copies:
+        in_dma(0, 0).start()  # pipeline warm-up: first folded slab in flight
+
+    def body(j, _):
+        slot = jax.lax.rem(j, _N_SLOTS)
+        if async_copies:
+            @pl.when(j + 1 < n_j)
+            def _prefetch():
+                in_dma(jax.lax.rem(j + 1, _N_SLOTS), j + 1).start()
+            in_dma(slot, j).wait()
+            @pl.when(j >= _N_SLOTS)
+            def _retire():
+                out_dma(slot, j - _N_SLOTS).wait()
+        else:
+            slab_ref[slot] = x_hbm_ref[:, pl.dslice(j * bi, n_slab)]
+
+        slab = slab_ref[slot]  # (B, n_slab, iw, ic)
+        mm5 = matmul_slab(slab, w_ref[...], n_slab=b * n_slab, iw=iw, ks=ks,
+                          boc=boc, acc_dtype=acc_dtype)
+        for e in range(b):
+            out = col2im_accumulate(
+                mm5[e * n_slab:(e + 1) * n_slab], s=s, ks=ks, ct=ct, cl=cl,
+                bi=bi, n_slab=n_slab, iw=iw, ow=ow, ow_p=ow_p, boc=boc,
+                delta=delta, acc_dtype=acc_dtype)
+            out = ppu_epilogue(
+                out, b_ref[...], s_ref[...], acc_dtype=acc_dtype,
+                activation=activation, out_scale=out_scale,
+                per_channel=per_channel, out_dtype=out_dtype)
+            if async_copies:
+                outb_ref[slot, e] = out
+            else:
+                o_hbm_ref[e, pl.dslice(j * block_oh, block_oh), :,
+                          pl.dslice(csel * boc, boc)] = out
+        if async_copies:
+            out_dma(slot, j).start()
+        return 0
+
+    jax.lax.fori_loop(0, n_j, body, 0)
+
+    if async_copies:
+        # Drain: the last one or two output DMAs are still in flight.
+        if n_j >= _N_SLOTS:
+            out_dma((n_j - 2) % _N_SLOTS, n_j - 2).wait()
+        out_dma((n_j - 1) % _N_SLOTS, n_j - 1).wait()
+
+
 def mm2im_db_tconv(
     x: jax.Array,
     w: jax.Array,
@@ -157,19 +240,24 @@ def mm2im_db_tconv(
     grid_order: str = "auto",
     interpret: Optional[bool] = None,
     pipeline: str = "auto",
+    fold_batch: bool = False,
 ) -> jax.Array:
     """Double-buffered MM2IM transposed convolution.
 
     Same contract as ``mm2im_pallas.mm2im_tconv`` (same dtypes, epilogue
-    fusions and plan knobs), bit-identical outputs.  ``pipeline`` selects
-    the slab-copy mechanism: ``'async'`` (pltpu async copy + semaphores),
-    ``'sync'`` (direct VMEM copies — the interpret-safe fallback), or
-    ``'auto'`` (async unless ``REPRO_MM2IM_DB_SYNC=1``).
+    fusions and plan knobs incl. ``fold_batch``), bit-identical outputs.
+    ``pipeline`` selects the slab-copy mechanism: ``'async'`` (pltpu async
+    copy + semaphores), ``'sync'`` (direct VMEM copies — the
+    interpret-safe fallback), or ``'auto'`` (async unless
+    ``REPRO_MM2IM_DB_SYNC=1``).  With ``fold_batch=True`` the two-slot
+    pipeline fetches batch-concatenated slabs and the grid is the
+    oc-block axis alone.
     """
     p = prepare_mm2im(
         x, w, bias, stride=stride, padding=padding, block_oh=block_oh,
         block_oc=block_oc, activation=activation, out_scale=out_scale,
-        out_dtype=out_dtype, grid_order=grid_order, interpret=interpret)
+        out_dtype=out_dtype, grid_order=grid_order, interpret=interpret,
+        fold_batch=fold_batch)
 
     if pipeline == "auto":
         pipeline = ("sync" if os.environ.get("REPRO_MM2IM_DB_SYNC", "")
@@ -180,25 +268,38 @@ def mm2im_db_tconv(
     async_copies = pipeline == "async"
 
     # j (the row-block sweep) is pipelined inside the kernel, so the grid is
-    # only the outer pair of the Alg. 1 loop nest.
-    if p.grid_order == "bcj":
-        grid = (p.b, p.n_c)
-        batch_axis = 0
-    else:  # "cbj"
-        grid = (p.n_c, p.b)
-        batch_axis = 1
-    iw_ = lambda *ids: (0, 0, ids[1 - batch_axis])
-    ib = lambda *ids: (ids[1 - batch_axis],)
-
-    kernel = functools.partial(
-        _mm2im_db_kernel,
-        batch_axis=batch_axis, n_j=p.n_j, block_oh=p.block_oh, oc_p=p.oc_p,
-        async_copies=async_copies, **p.kernel_kwargs())
-
-    scratch = [
-        pltpu.VMEM((_N_SLOTS * p.n_slab, p.iw, p.ic), p.x_p.dtype),
-        pltpu.VMEM((_N_SLOTS * p.block_oh, p.ow_p, p.boc), p.out_dtype),
-    ]
+    # only the outer pair of the Alg. 1 loop nest — or, batch-folded, the
+    # oc-block axis alone (bcj/cbj collapse with the batch axis).
+    if p.fold_batch:
+        grid = (p.n_c,)
+        iw_ = lambda c: (0, 0, c)
+        ib = lambda c: (c,)
+        kernel = functools.partial(
+            _mm2im_db_folded_kernel,
+            b=p.b, n_j=p.n_j, block_oh=p.block_oh, oc_p=p.oc_p,
+            async_copies=async_copies, **p.kernel_kwargs())
+        scratch = [
+            pltpu.VMEM((_N_SLOTS, p.b, p.n_slab, p.iw, p.ic), p.x_p.dtype),
+            pltpu.VMEM((_N_SLOTS, p.b, p.block_oh, p.ow_p, p.boc),
+                       p.out_dtype),
+        ]
+    else:
+        if p.grid_order == "bcj":
+            grid = (p.b, p.n_c)
+            batch_axis = 0
+        else:  # "cbj"
+            grid = (p.n_c, p.b)
+            batch_axis = 1
+        iw_ = lambda *ids: (0, 0, ids[1 - batch_axis])
+        ib = lambda *ids: (ids[1 - batch_axis],)
+        kernel = functools.partial(
+            _mm2im_db_kernel,
+            batch_axis=batch_axis, n_j=p.n_j, block_oh=p.block_oh,
+            oc_p=p.oc_p, async_copies=async_copies, **p.kernel_kwargs())
+        scratch = [
+            pltpu.VMEM((_N_SLOTS * p.n_slab, p.iw, p.ic), p.x_p.dtype),
+            pltpu.VMEM((_N_SLOTS * p.block_oh, p.ow_p, p.boc), p.out_dtype),
+        ]
     if async_copies:
         scratch += [pltpu.SemaphoreType.DMA((_N_SLOTS,)),
                     pltpu.SemaphoreType.DMA((_N_SLOTS,))]
@@ -217,6 +318,7 @@ def mm2im_db_tconv(
         out_shape=jax.ShapeDtypeStruct(
             (p.b, p.n_j * p.block_oh, p.ow_p, p.oc_p), p.out_dtype),
         scratch_shapes=scratch,
+        compiler_params=grid_semantics(len(grid), inner_arbitrary=False),
         interpret=p.interpret,
     )(p.x_p, p.w3, p.bias_p, p.scales_p)
 

@@ -38,6 +38,15 @@ double-buffered pipeline variant (``kernels/mm2im_db_pallas.py``), so the
 two kernels are bit-identical by construction — they differ only in how
 the input slab reaches VMEM (resident whole-input block here vs. pipelined
 two-slot DMA there; docs/DESIGN.md §2.4).
+
+**Batch folding** (plan schema v2, ``fold_batch=True``): for batched
+small-spatial problems (the paper's GAN layers — DCGAN's first TCONV has
+``n_slab·Iw`` ≈ 24 MatMul rows against a 128-lane MXU) the per-element
+MatMul runs mostly empty.  Folding collapses ``(batch, slab-rows)`` into
+the M-dimension — one ``(B·n_slab·Iw, Ic)`` product per row-block, grid
+without a batch axis — and runs col2im per element over views of the
+folded product, so the result stays bit-identical to the unfolded
+dataflow while the MXU M-occupancy grows ``B``-fold (docs/DESIGN.md §2.5).
 """
 
 from __future__ import annotations
@@ -50,6 +59,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.epilogue import ACTIVATIONS
 from repro.kernels.ref import crop_offsets, out_size
@@ -64,10 +74,30 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def grid_semantics(n_parallel: int,
+                   inner_arbitrary: bool = True) -> "pltpu.TPUCompilerParams":
+    """Mosaic dimension semantics for an MM2IM grid.
+
+    Every outer grid dimension (batch / oc-block — and, folded, just the
+    oc-block) indexes independent work, so Mosaic may partition those grid
+    cells across TensorCores (``"parallel"``).  The single-buffered
+    kernel's inner output-row sweep stays ``"arbitrary"`` (it revisits the
+    resident input block across ``j`` steps); the double-buffered kernel
+    pipelines ``j`` in-kernel, so its grid is outer dims only
+    (``inner_arbitrary=False``).  Interpret mode accepts and ignores the
+    annotation, so one call site serves both backends.
+    """
+    sem = ("parallel",) * n_parallel
+    if inner_arbitrary:
+        sem += ("arbitrary",)
+    return pltpu.TPUCompilerParams(dimension_semantics=sem)
+
+
 def plan_blocks(
     ih: int, iw: int, ic: int, ks: int, oc: int, stride: int, padding: str,
     *, vmem_budget: int = 12 * 2**20, in_bytes: int = 4,
     override: Optional[tuple[int, int]] = None,
+    batch: int = 1, fold_batch: bool = False,
 ) -> tuple[int, int]:
     """Pick (block_oh, block_oc) within a VMEM budget.
 
@@ -75,10 +105,18 @@ def plan_blocks(
     contiguous row range); block_oc tiles the N dimension of the MatMul.
     This is the host-driver role of the paper's 0x01 Configure instruction.
 
+    ``fold_batch=True`` shrinks the working budget by ``batch``: the
+    folded launch holds B-deep input/product/output blocks, so heuristic
+    blocks must be picked as if each byte cost B — this is the single
+    definition of the folded-budget rule (``prepare_mm2im`` and
+    ``core/tiling.plan`` both rely on it).
+
     ``override=(block_oh, block_oc)`` bypasses the heuristic entirely (the
     autotuner's explicit-plan path); it is validated, not second-guessed.
     """
     s = stride
+    if fold_batch:
+        vmem_budget = max(vmem_budget // max(batch, 1), 1)
     if override is not None:
         boh, boc = int(override[0]), int(override[1])
         if boh % s != 0 or boh < s:
@@ -221,6 +259,45 @@ def _mm2im_kernel(
         out_dtype=out_dtype)
 
 
+def _mm2im_folded_kernel(
+    x_ref, w_ref, b_ref, s_ref, o_ref, *,
+    b: int, s: int, ks: int, ct: int, cl: int,
+    bi: int, n_slab: int, iw: int, ow: int, ow_p: int, boc: int,
+    delta: int, acc_dtype, out_dtype, activation: str, out_scale,
+    per_channel: bool,
+):
+    """Batch-folded grid cell: one row-block of EVERY batch element.
+
+    The grid drops its batch axis — ``grid = (oc-block, oh-block)`` — and
+    the ``B`` per-element slabs are stacked into the MatMul M-dimension:
+    a single ``(B·n_slab·Iw, Ic) @ (Ic, Ks²·boc)`` product replaces ``B``
+    starved ``(n_slab·Iw, Ic)`` products, filling the 128-lane MXU on the
+    paper's small-spatial GAN layers (docs/DESIGN.md §2.5).
+
+    col2im + the PPU epilogue then run per batch element over *views* of
+    the folded product: each element sees exactly the ``mm5`` slice the
+    unfolded kernel would have computed, with the identical reduction
+    order, so folded and unfolded execution are bit-identical by
+    construction.
+    """
+    j = pl.program_id(1)  # inner output-row sweep
+
+    # SendInputRows, batch-concatenated: (B, n_slab, iw, ic).
+    slab = x_ref[:, pl.dslice(j * bi, n_slab)]
+    # One MXU launch with M = B*n_slab*iw; mm5 is (B*n_slab, iw, ks, ks, boc).
+    mm5 = matmul_slab(slab, w_ref[...], n_slab=b * n_slab, iw=iw, ks=ks,
+                      boc=boc, acc_dtype=acc_dtype)
+    for e in range(b):
+        out = col2im_accumulate(
+            mm5[e * n_slab:(e + 1) * n_slab], s=s, ks=ks, ct=ct, cl=cl,
+            bi=bi, n_slab=n_slab, iw=iw, ow=ow, ow_p=ow_p, boc=boc,
+            delta=delta, acc_dtype=acc_dtype)
+        o_ref[e] = ppu_epilogue(
+            out, b_ref[...], s_ref[...], acc_dtype=acc_dtype,
+            activation=activation, out_scale=out_scale,
+            per_channel=per_channel, out_dtype=out_dtype)
+
+
 @dataclasses.dataclass
 class MM2IMPrep:
     """Staged operands + resolved tile geometry for one MM2IM launch.
@@ -247,6 +324,8 @@ class MM2IMPrep:
     acc_dtype: object; out_dtype: object
     per_channel: bool; out_scale: Optional[float]; activation: str
     grid_order: str; interpret: bool
+    # Plan v2: batch folded into the MatMul M-dimension (grid drops batch).
+    fold_batch: bool = False
 
     def kernel_kwargs(self) -> dict:
         """The static kwargs shared by both kernel bodies."""
@@ -273,6 +352,7 @@ def prepare_mm2im(
     out_dtype,
     grid_order: str,
     interpret: Optional[bool],
+    fold_batch: bool = False,
 ) -> MM2IMPrep:
     """Host-side staging (the driver role / 0x01 Configure instruction)."""
     if interpret is None:
@@ -293,7 +373,8 @@ def prepare_mm2im(
 
     if block_oh is None or block_oc is None:
         p_oh, p_oc = plan_blocks(ih, iw, ic, ks, oc, s, padding,
-                                 in_bytes=x.dtype.itemsize)
+                                 in_bytes=x.dtype.itemsize,
+                                 batch=b, fold_batch=fold_batch)
         block_oh = block_oh or p_oh
         block_oc = block_oc or p_oc
     # Explicit-plan path: plan_blocks validates the override (stride
@@ -348,7 +429,7 @@ def prepare_mm2im(
         n_slab=n_slab, n_j=n_j, n_c=n_c, ihp=ihp, ow_p=ow_p, oc_p=oc_p,
         acc_dtype=acc_dtype, out_dtype=out_dtype, per_channel=per_channel,
         out_scale=out_scale, activation=activation, grid_order=grid_order,
-        interpret=interpret)
+        interpret=interpret, fold_batch=bool(fold_batch))
 
 
 def mm2im_tconv(
@@ -365,6 +446,7 @@ def mm2im_tconv(
     out_dtype=None,
     grid_order: str = "auto",
     interpret: Optional[bool] = None,
+    fold_batch: bool = False,
 ) -> jax.Array:
     """Fused MM2IM transposed convolution.
 
@@ -377,39 +459,63 @@ def mm2im_tconv(
       activation: fused epilogue nonlinearity.
       out_scale: if set (int8 mode), requantize int32 accum -> int8.
       interpret: force Pallas interpret mode (defaults to True off-TPU).
+      fold_batch: collapse (batch, slab-rows) into the MatMul M-dimension
+        — the grid drops its batch axis, one (B*n_slab*Iw, Ic) product per
+        row-block feeds the MXU, and col2im runs per element over views of
+        it (bit-identical to unfolded; docs/DESIGN.md §2.5).
     """
     p = prepare_mm2im(
         x, w, bias, stride=stride, padding=padding, block_oh=block_oh,
         block_oc=block_oc, activation=activation, out_scale=out_scale,
-        out_dtype=out_dtype, grid_order=grid_order, interpret=interpret)
+        out_dtype=out_dtype, grid_order=grid_order, interpret=interpret,
+        fold_batch=fold_batch)
 
-    kernel = functools.partial(_mm2im_kernel, **p.kernel_kwargs())
-
-    if p.grid_order == "bcj":
-        grid = (p.b, p.n_c, p.n_j)
-        ix = lambda b_, c, j: (b_, 0, 0, 0)
-        iw_ = lambda b_, c, j: (0, 0, c)
-        ib = lambda b_, c, j: (c,)
-        io = lambda b_, c, j: (b_, j, 0, c)
-    else:  # "cbj"
-        grid = (p.n_c, p.b, p.n_j)
-        ix = lambda c, b_, j: (b_, 0, 0, 0)
-        iw_ = lambda c, b_, j: (0, 0, c)
-        ib = lambda c, b_, j: (c,)
-        io = lambda c, b_, j: (b_, j, 0, c)
-
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
+    if p.fold_batch:
+        # Batch folded into M: the grid is (oc-block, oh row-block) only
+        # — grid_order's bcj/cbj distinction collapses with the batch axis.
+        kernel = functools.partial(_mm2im_folded_kernel, b=p.b,
+                                   **p.kernel_kwargs())
+        grid = (p.n_c, p.n_j)
+        in_specs = [
+            pl.BlockSpec((p.b, p.ihp, p.iw, p.ic), lambda c, j: (0, 0, 0, 0)),
+            pl.BlockSpec((p.ic, p.ks * p.ks, p.boc), lambda c, j: (0, 0, c)),
+            pl.BlockSpec((p.boc,), lambda c, j: (c,)),
+            pl.BlockSpec((p.boc,), lambda c, j: (c,)),
+        ]
+        out_specs = pl.BlockSpec((p.b, p.block_oh, p.ow_p, p.boc),
+                                 lambda c, j: (0, j, 0, c))
+        n_parallel = 1
+    else:
+        kernel = functools.partial(_mm2im_kernel, **p.kernel_kwargs())
+        if p.grid_order == "bcj":
+            grid = (p.b, p.n_c, p.n_j)
+            ix = lambda b_, c, j: (b_, 0, 0, 0)
+            iw_ = lambda b_, c, j: (0, 0, c)
+            ib = lambda b_, c, j: (c,)
+            io = lambda b_, c, j: (b_, j, 0, c)
+        else:  # "cbj"
+            grid = (p.n_c, p.b, p.n_j)
+            ix = lambda c, b_, j: (b_, 0, 0, 0)
+            iw_ = lambda c, b_, j: (0, 0, c)
+            ib = lambda c, b_, j: (c,)
+            io = lambda c, b_, j: (b_, j, 0, c)
+        in_specs = [
             pl.BlockSpec((1, p.ihp, p.iw, p.ic), ix),
             pl.BlockSpec((p.ic, p.ks * p.ks, p.boc), iw_),
             pl.BlockSpec((p.boc,), ib),
             pl.BlockSpec((p.boc,), ib),
-        ],
-        out_specs=pl.BlockSpec((1, p.block_oh, p.ow_p, p.boc), io),
+        ]
+        out_specs = pl.BlockSpec((1, p.block_oh, p.ow_p, p.boc), io)
+        n_parallel = 2
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=jax.ShapeDtypeStruct(
             (p.b, p.n_j * p.block_oh, p.ow_p, p.oc_p), p.out_dtype),
+        compiler_params=grid_semantics(n_parallel),
         interpret=p.interpret,
     )(p.x_p, p.w3, p.bias_p, p.scales_p)
 

@@ -37,9 +37,12 @@ what it exists for (the native kernels stay bit-exact at every size).
 
 An explicit tile plan (``registry.Plan`` or a ``(block_oh, block_oc[,
 grid_order])`` tuple — typically produced by ``core/autotune.py``) can be
-passed as ``plan=``; it flows into the Pallas kernel's block geometry, and
-a plan carrying ``method='mm2im_db'`` upgrades the default dispatch to the
-variant it was tuned for.  Methods that don't tile reject explicit plans.
+passed as ``plan=``; it flows into the Pallas kernel's block geometry
+(incl. the schema-v2 ``fold_batch`` knob, which folds the batch into the
+MatMul M-dimension — bit-identical, so plan consumption never changes
+results), and a plan carrying ``method='mm2im_db'`` upgrades the default
+dispatch to the variant it was tuned for.  Methods that don't tile reject
+explicit plans.
 
 **Automatic plan consumption** (docs/AUTOTUNER.md): when no ``plan=`` is
 given and the method supports plans, the dispatcher looks up the tuned
@@ -99,7 +102,8 @@ def _make_mm2im_diff(kernel_fn):
         kw = {}
         if plan is not None:
             kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
-                      grid_order=plan.grid_order)
+                      grid_order=plan.grid_order,
+                      fold_batch=plan.fold_batch)
         return kernel_fn(x, w, bias, stride=stride, padding=padding,
                          activation=activation, **kw)
 
@@ -148,7 +152,8 @@ def _make_mm2im_impl(diff_fn, kernel_fn):
             kw = {}
             if plan is not None:
                 kw = dict(block_oh=plan.block_oh, block_oc=plan.block_oc,
-                          grid_order=plan.grid_order)
+                          grid_order=plan.grid_order,
+                          fold_batch=plan.fold_batch)
             return kernel_fn(x, w, epilogue.bias, stride=stride,
                              padding=padding, activation=epilogue.activation,
                              out_scale=epilogue.out_scale,

@@ -71,7 +71,7 @@ from repro.core.epilogue import STAGES
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """Explicit Tiled-MM2IM plan (paper Alg. 1 geometry knobs).
+    """Explicit Tiled-MM2IM plan (paper Alg. 1 geometry knobs) — schema v2.
 
     ``block_oh`` must be a multiple of the stride it is used with;
     ``grid_order`` is ``'bcj'`` (activation-stationary), ``'cbj'``
@@ -80,12 +80,22 @@ class Plan:
     ``method`` optionally pins the kernel variant the plan was tuned for
     (e.g. ``'mm2im_db'`` for the double-buffered pipeline).  ``None`` means
     "no preference": the dispatcher's requested method runs the geometry.
+
+    ``fold_batch`` (schema v2) collapses ``(batch, slab-rows)`` into the
+    MatMul M-dimension: one ``(B·n_slab·Iw, Ic)`` product per row-block
+    instead of one starved ``(n_slab·Iw, Ic)`` product per batch element,
+    and the Pallas grid drops its batch axis.  Bit-identical to the
+    unfolded dataflow by construction (per-element reduction order is
+    unchanged — docs/DESIGN.md §2.5); with ``batch == 1`` it degenerates
+    to the unfolded kernel.  Serialized plans always carry the field
+    (``to_json``); v1 plans without it load as unfolded (``from_json``).
     """
 
     block_oh: int
     block_oc: int
     grid_order: str = "auto"
     method: Optional[str] = None
+    fold_batch: bool = False
 
     def __post_init__(self):
         if self.block_oh < 1 or self.block_oc < 1:
@@ -96,7 +106,8 @@ class Plan:
 
     def to_json(self) -> dict:
         d = {"block_oh": self.block_oh, "block_oc": self.block_oc,
-             "grid_order": self.grid_order}
+             "grid_order": self.grid_order,
+             "fold_batch": bool(self.fold_batch)}
         if self.method is not None:
             d["method"] = self.method
         return d
@@ -106,7 +117,8 @@ class Plan:
         method = d.get("method")
         return cls(int(d["block_oh"]), int(d["block_oc"]),
                    str(d.get("grid_order", "auto")),
-                   None if method is None else str(method))
+                   None if method is None else str(method),
+                   bool(d.get("fold_batch", False)))
 
 
 PlanLike = Union[Plan, Tuple[int, int], Tuple[int, int, str], None]

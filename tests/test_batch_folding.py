@@ -1,0 +1,240 @@
+"""Batch folding (plan schema v2): parity matrix, enumeration, dispatch.
+
+The fold contract is strict: collapsing ``(batch, slab-rows)`` into the
+MatMul M-dimension must be **bit-identical** to the grid-batch dataflow
+for every (stride, padding, dtype, kernel-variant) cell — col2im runs per
+batch element over views of the folded product with the unfolded
+reduction order, so the fold is purely a performance knob and the
+autotuner/plan tiers may apply it without ever changing results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiling
+from repro.core.maps import TConvProblem
+from repro.kernels import ref, registry
+from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
+from repro.kernels.mm2im_pallas import grid_semantics, mm2im_tconv
+from repro.kernels.ops import tconv, tconv_int8
+from repro.kernels.registry import Plan
+
+RNG = np.random.default_rng(21)
+
+# One geometry per stride; SAME requires Ks >= S.
+_GEOM = {1: (3, 4, 4), 2: (5, 4, 4), 4: (5, 4, 5)}  # s -> (ks, ih, iw)
+
+
+def _f32_problem(s, b=3, ic=8, oc=5):
+    ks, ih, iw = _GEOM[s]
+    x = RNG.standard_normal((b, ih, iw, ic)).astype(np.float32)
+    w = (RNG.standard_normal((ks, ks, oc, ic)) * 0.1).astype(np.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# The parity matrix: folded vs grid-batch vs gold across
+# stride x padding x dtype x kernel variant.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_fold_parity_f32(stride, padding, method):
+    """f32: folded == grid-batch bitwise, both == lax gold numerically."""
+    x, w = _f32_problem(stride)
+    grid = np.asarray(tconv(x, w, stride=stride, padding=padding,
+                            method=method,
+                            plan=Plan(stride, 4, "bcj")))
+    fold = np.asarray(tconv(x, w, stride=stride, padding=padding,
+                            method=method,
+                            plan=Plan(stride, 4, "bcj", fold_batch=True)))
+    assert (fold == grid).all(), (stride, padding, method)
+    gold = np.asarray(ref.tconv_lax(x, w, stride=stride, padding=padding))
+    np.testing.assert_allclose(fold, gold, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_fold_parity_int8_requant(stride, padding, method):
+    """int8 + requant epilogue: folded == grid-batch == oracle, bit-exact."""
+    ks, ih, iw = _GEOM[stride]
+    b, ic, oc = 3, 8, 4
+    xq = RNG.integers(-128, 128, (b, ih, iw, ic), dtype=np.int8)
+    wq = RNG.integers(-128, 128, (ks, ks, oc, ic), dtype=np.int8)
+    bq = RNG.integers(-500, 500, (oc,), dtype=np.int32)
+    grid = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=stride,
+                                 padding=padding, method=method,
+                                 plan=Plan(stride, 4, "bcj")))
+    fold = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=stride,
+                                 padding=padding, method=method,
+                                 plan=Plan(stride, 4, "bcj",
+                                           fold_batch=True)))
+    assert (fold == grid).all(), (stride, padding, method)
+    acc = ref.iom_reference_int8(xq, wq, bq, stride=stride, padding=padding)
+    want = np.asarray(ref.requantize(acc, 0.003))
+    assert (fold == want).all(), (stride, padding, method)
+    assert fold.dtype == np.int8
+
+
+@pytest.mark.parametrize("pipeline", ["async", "sync"])
+def test_fold_db_pipelines_bit_identical(pipeline):
+    """Folded db: async-DMA and sync fallback both match the folded sb."""
+    x, w = _f32_problem(2, b=4)
+    want = np.asarray(mm2im_tconv(x, w, stride=2, interpret=True,
+                                  fold_batch=True))
+    got = np.asarray(mm2im_db_tconv(x, w, stride=2, interpret=True,
+                                    fold_batch=True, pipeline=pipeline))
+    assert (got == want).all()
+
+
+def test_fold_batch1_degenerates():
+    """fold_batch with B == 1 is the unfolded kernel, bitwise."""
+    x, w = _f32_problem(2, b=1)
+    for method in ("mm2im", "mm2im_db"):
+        base = np.asarray(tconv(x, w, stride=2, method=method))
+        fold = np.asarray(tconv(x, w, stride=2, method=method,
+                                plan=Plan(2, 4, "bcj", fold_batch=True)))
+        assert (fold == base).all(), method
+
+
+def test_fold_fused_epilogue_and_gradients():
+    """Bias+activation fuse under the fold, and training runs through a
+    folded plan (custom_vjp path) with reference gradients."""
+    x, w = _f32_problem(2, b=4)
+    bias = RNG.standard_normal(5).astype(np.float32)
+    got = np.asarray(tconv(x, w, jnp.asarray(bias), stride=2,
+                           activation="relu",
+                           plan=Plan(2, 4, "bcj", fold_batch=True)))
+    want = np.maximum(np.asarray(ref.tconv_lax(x, w, stride=2)) + bias, 0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    plan = Plan(2, 4, "bcj", fold_batch=True)
+
+    def loss_fold(xx, ww):
+        return jnp.sum(tconv(xx, ww, stride=2, plan=plan) ** 2)
+
+    def loss_ref(xx, ww):
+        return jnp.sum(ref.tconv_direct(xx, ww, stride=2) ** 2)
+
+    g1 = jax.grad(loss_fold, argnums=(0, 1))(x, w)
+    g2 = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Plan schema v2 value type
+# ---------------------------------------------------------------------------
+
+
+def test_plan_v2_json_roundtrip():
+    p = Plan(4, 8, "bcj", "mm2im_db", True)
+    assert Plan.from_json(p.to_json()) == p
+    # Serialized plans always carry the fold decision explicitly.
+    assert Plan(4, 8).to_json()["fold_batch"] is False
+    # v1 payloads (no fold_batch) load as unfolded.
+    assert Plan.from_json({"block_oh": 4, "block_oc": 8}) == Plan(4, 8)
+    # Tuple normalization stays the legacy 2/3-element contract.
+    assert registry.as_plan((4, 8)).fold_batch is False
+
+
+def test_grid_semantics_shapes():
+    """The Mosaic partitioning hints match each kernel's grid rank."""
+    assert grid_semantics(2).dimension_semantics == \
+        ("parallel", "parallel", "arbitrary")       # sb, grid-batch
+    assert grid_semantics(1).dimension_semantics == \
+        ("parallel", "arbitrary")                   # sb, folded
+    assert grid_semantics(2, inner_arbitrary=False).dimension_semantics == \
+        ("parallel", "parallel")                    # db, grid-batch
+    assert grid_semantics(1, inner_arbitrary=False).dimension_semantics == \
+        ("parallel",)                               # db, folded
+
+
+# ---------------------------------------------------------------------------
+# Enumeration + consumption
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_plans_enumerate_fold_only_batched():
+    p = TConvProblem(4, 4, 32, 5, 16, 2)
+    assert not any(c.fold_batch for c in tiling.candidate_plans(p, batch=1))
+    cands = tiling.candidate_plans(p, batch=8)
+    folded = [c for c in cands if c.fold_batch]
+    assert folded, "batch-8 enumeration must include folded candidates"
+    budget = int(tiling.V5E.vmem_bytes * 0.75)
+    for c in folded:
+        # Folded candidates are budgeted under the B-deep residency and
+        # carry the single canonical grid order (bcj/cbj collapse).
+        assert c.vmem_bytes <= budget
+        assert c.grid_order == "bcj"
+        assert tiling.vmem_bytes(p, c.block_oh, c.block_oc, bits=32,
+                                 method=c.method, batch=8, fold_batch=True
+                                 ) > tiling.vmem_bytes(
+                                     p, c.block_oh, c.block_oc, bits=32,
+                                     method=c.method)
+    # Dedup key includes the fold: geometry-identical folded/unfolded
+    # candidates coexist.
+    keys = [(c.method, c.block_oh, c.block_oc, c.grid_order, c.fold_batch)
+            for c in cands]
+    assert len(keys) == len(set(keys))
+
+
+def test_folded_plan_consumed_from_cache(monkeypatch, tmp_path):
+    """A tuned fold_batch plan auto-consumed at trace time executes folded
+    and never changes results (the plan-tier safety property)."""
+    from repro.core import autotune, plan_table
+    from repro.kernels import ops
+
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "cache.json"))
+    monkeypatch.setenv(plan_table.TABLE_DIR_ENV, str(tmp_path / "none"))
+    monkeypatch.delenv(ops.AUTOLOAD_ENV, raising=False)
+    autotune.reset_shared_caches()
+    plan_table.reset_shipped_tables()
+    ops.clear_consumed_plans()
+
+    p = TConvProblem(5, 4, 6, 3, 4, 2)
+    batch = 4
+    folded_plan = Plan(2, 4, "bcj", "mm2im_db", True)
+    cache = autotune.PlanCache(tmp_path / "cache.json")
+    cache.put(autotune.cache_key(p, batch=batch), folded_plan)
+
+    x = RNG.standard_normal((batch, p.ih, p.iw, p.ic)).astype(np.float32)
+    w = (RNG.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+         ).astype(np.float32)
+    got = np.asarray(tconv(x, w, stride=p.stride))
+    key, plan, tier = ops.consumed_plans()[-1]
+    assert plan == folded_plan and tier == autotune.TIER_USER_CACHE
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=p.stride)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_measure_plan_times_folded_geometry():
+    """measure_plan keeps the fold knob when timing a candidate (a folded
+    candidate must be timed folded, or tuning would rank a different
+    program than dispatch runs)."""
+    from repro.core.autotune import measure_plan
+
+    p = TConvProblem(4, 4, 4, 3, 2, 2)
+    us = measure_plan(p, Plan(2, 2, "bcj", "mm2im", True), batch=2,
+                      repeats=1, warmup=1)
+    assert np.isfinite(us) and us > 0
+
+
+def test_autotune_b8_persists_fold_field(tmp_path):
+    """A batch-8 tuning run persists the fold decision in the cache entry
+    (schema v2), and the entry round-trips through a fresh PlanCache."""
+    from repro.core.autotune import PlanCache, autotune_result
+
+    p = TConvProblem(4, 4, 8, 3, 4, 2)
+    cache = PlanCache(tmp_path / "c.json")
+    res = autotune_result(p, batch=8, cache=cache, max_measure=2, repeats=1)
+    entry = cache.get_entry(res.key)
+    assert "fold_batch" in entry["plan"]
+    assert PlanCache(tmp_path / "c.json").get(res.key) == res.plan

@@ -94,6 +94,51 @@ def test_validate_rejects_bad_entries():
     assert plan_table.validate_table_json([1, 2]), "non-dict must fail"
 
 
+def test_v1_table_lenient_load(tmp_path):
+    """Pre-fold v1 tables (the committed-cpu.json generation) keep
+    loading: version 1 validates, plans without fold_batch read back as
+    unfolded — and the v2 field is *gated* out of v1 files."""
+    key = "tconv:ih4:iw4:ic8:ks3:oc4:s2:SAME|float32|tpu-v5e|b1"
+    v1 = {
+        "version": 1,
+        "provenance": {"backend": "cpu", "jax": "0.4.37", "repeats": 2,
+                       "created": 1754000000.0},
+        "entries": {key: {"plan": {"block_oh": 2, "block_oc": 4,
+                                   "grid_order": "cbj"}, "us": 9.0}},
+    }
+    assert plan_table.validate_table_json(v1) == []
+    _write_table(tmp_path, "cpu", v1)
+    t = plan_table.load_table("cpu", directory=tmp_path, strict=True)
+    assert t.get(key) == Plan(2, 4, "cbj")
+    assert t.get(key).fold_batch is False
+
+    # The same table claiming to carry the v2 field is rejected: old
+    # readers would silently drop the fold and run an untimed geometry.
+    # The exporter writes the field into BOTH plan dicts, so the gate
+    # covers both.
+    for field in ("plan", "default_plan"):
+        v1_bad = json.loads(json.dumps(v1))
+        v1_bad["entries"][key][field] = {"block_oh": 2, "block_oc": 4,
+                                         "fold_batch": True}
+        errs = plan_table.validate_table_json(v1_bad)
+        assert errs and any("fold_batch" in e and "version 2" in e
+                            for e in errs), (field, errs)
+        # Stamped as v2 the identical payload is fine.
+        v1_bad["version"] = 2
+        assert plan_table.validate_table_json(v1_bad) == []
+
+
+def test_v2_table_roundtrips_folded_plan(tmp_path):
+    key = "tconv:ih4:iw4:ic8:ks3:oc4:s2:SAME|float32|tpu-v5e|b8"
+    folded = Plan(2, 4, "bcj", "mm2im_db", True)
+    t = _table_dict({key: _entry(folded, us=3.0)})
+    assert t["version"] == plan_table.TABLE_VERSION == 2
+    assert plan_table.validate_table_json(t) == []
+    _write_table(tmp_path, "cpu", t)
+    loaded = plan_table.load_table("cpu", directory=tmp_path, strict=True)
+    assert loaded.get(key) == folded
+
+
 def test_load_table_lenient_vs_strict(tmp_path):
     # Absent file: lenient None, strict raises.
     assert plan_table.load_table("cpu", directory=tmp_path) is None
@@ -328,16 +373,40 @@ def test_tune_sweep_cli_resumes_without_remeasuring(tmp_path):
     third = _run_cli([*base, "--expect-measured", "5"], env)
     assert third.returncode == 2
 
+    # Batch-8 work item: fold_batch candidates enumerate (plan v2), the
+    # tuned entry persists the fold decision explicitly, and the resumed
+    # rerun replays it with zero re-measurements.
+    b8 = ["--filter", "ih1:iw1", "--dtypes", "f32", "--batches", "8",
+          "--repeats", "1", "--max-measure", "2", "--cache", str(cache)]
+    fold_first = _run_cli([*b8, "--expect-measured", "1"], env)
+    assert fold_first.returncode == 0, fold_first.stdout + fold_first.stderr
+    entries = json.loads(cache.read_text())["entries"]
+    b1_key = next(k for k in entries if k.endswith("|b1"))
+    b8_key = next(k for k in entries if k.endswith("|b8"))
+    # The fold decision is serialized explicitly (schema v2)...
+    assert "fold_batch" in entries[b8_key]["plan"]
+    # ...and folded candidates were actually enumerated: the b8 field is
+    # strictly larger than the b1 field for the same problem (the fold
+    # knob is the only batch-dependent candidate axis).
+    assert entries[b8_key]["n_candidates"] > entries[b1_key]["n_candidates"]
+    fold_again = _run_cli([*b8, "--expect-measured", "0"], env)
+    assert fold_again.returncode == 0, fold_again.stdout + fold_again.stderr
+
     # Export promotes the cache into a strict-valid table whose
-    # provenance reflects the *entries'* recorded measurement conditions.
+    # provenance reflects the *entries'* recorded measurement conditions —
+    # stamped at the current schema version so the fold_batch field it
+    # carries is legal.
     out = tmp_path / "tables" / "cpu.json"
     exp = _run_cli(["--cache", str(cache), "--export", str(out),
                     "--backend", "cpu"], env)
     assert exp.returncode == 0, exp.stdout + exp.stderr
     t = plan_table.load_table("cpu", directory=out.parent, strict=True)
-    assert len(t) == 1 and t.provenance["backend"] == "cpu"
+    assert len(t) == 2 and t.provenance["backend"] == "cpu"
     assert t.provenance["repeats"] == 1  # from the entry, not the CLI default
     assert math.isfinite(t.get_entry(t.keys()[0])["us"])
+    raw = json.loads(out.read_text())
+    assert raw["version"] == plan_table.TABLE_VERSION
+    assert all("fold_batch" in e["plan"] for e in raw["entries"].values())
 
     # Exporting cpu-tuned entries into a table labeled for another
     # backend is refused (misprovenance guard).

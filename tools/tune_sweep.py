@@ -108,7 +108,7 @@ def run_sweep(args) -> int:
         return 0
 
     t0 = time.monotonic()
-    measured = skipped = 0
+    measured = skipped = folded = 0
     interrupted = False
     for i, (p, dtype, batch, key) in enumerate(items):
         if args.max_seconds and time.monotonic() - t0 > args.max_seconds:
@@ -128,11 +128,14 @@ def run_sweep(args) -> int:
             measured += 1
             status = f"measured {res.n_measured}/{res.n_candidates}"
         pl = res.plan
+        folded += int(pl.fold_batch)
         print(f"[{i + 1}/{len(items)}] {key} -> "
               f"oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order}"
-              f"/{pl.method or 'mm2im'} us={res.us:.1f} ({status})")
+              f"/{pl.method or 'mm2im'}{'/fold' if pl.fold_batch else ''} "
+              f"us={res.us:.1f} ({status})")
 
     print(f"-- sweep: measured={measured} skipped={skipped} "
+          f"folded_winners={folded} "
           f"elapsed={time.monotonic() - t0:.1f}s "
           f"cache={cache.path} entries={len(cache)}"
           + (" (interrupted)" if interrupted else ""))
@@ -183,7 +186,10 @@ def run_export(args) -> int:
     if out.exists():  # incremental promotion: new tuning updates old table
         try:
             prior = json.loads(out.read_text())
-            if prior.get("version") == plan_table.TABLE_VERSION:
+            # Lenient v1 load: merging new tuning into a pre-fold v1 table
+            # keeps its entries and re-stamps the file at the current
+            # schema version (the fold_batch field is valid from v2 on).
+            if prior.get("version") in plan_table.SUPPORTED_TABLE_VERSIONS:
                 entries = dict(prior.get("entries", {}))
         except ValueError:
             print(f"-- warning: existing {out} unreadable, overwriting")
