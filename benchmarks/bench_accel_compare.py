@@ -62,7 +62,7 @@ def measured_int8() -> None:
         dev = int(np.abs(outs[m].astype(np.int32)
                          - outs["mm2im"].astype(np.int32)).max())
         if m in ("mm2im", "mm2im_db"):
-            emit(f"tableIII_int8_{m}", 0.0,
+            emit(f"tableIII_int8_{m}", None,
                  f"native_requant=1;max_dev_vs_mm2im={dev}")
         else:
             us = time_fn(fn, xq, repeats=3)
@@ -76,7 +76,7 @@ def measured_int8() -> None:
                                  plan=Plan(4, 8, "bcj", fold_batch=True)))
     grid = np.asarray(tconv_int8(xq8, wq, bq, scale, stride=p.stride,
                                  plan=Plan(4, 8, "bcj")))
-    emit("tableIII_int8_folded_b8", 0.0,
+    emit("tableIII_int8_folded_b8", None,
          f"bitident_vs_grid={int((fold == grid).all())};"
          f"native_requant=1;fold_batch=1")
 
@@ -112,7 +112,7 @@ def main() -> None:
                                 e.hbm_bytes))
             line.append(f"{method}:t={e.t_overlapped*1e6:.0f}us"
                         f",util={e.mxu_utilization:.2f}")
-        emit(f"tableIII_{row.name}", 0.0, ";".join(line))
+        emit(f"tableIII_{row.name}", None, ";".join(line))
 
     for method, vals in agg.items():
         t = np.array([v[0] for v in vals])

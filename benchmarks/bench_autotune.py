@@ -99,7 +99,9 @@ def fold_head_to_head() -> None:
         pred_fold = est(p, batch, bits=32, fold_batch=True,
                         **geom).t_overlapped
         emit(f"autotune_fold_dcgan1_{method}", fold_us,
-             f"batch={batch};grid_us={grid_us:.1f};fold_us={fold_us:.1f};"
+             f"batch={batch};geom=oh{geom['block_oh']}/oc{geom['block_oc']}"
+             f"/{geom['grid_order']};"
+             f"grid_us={grid_us:.1f};fold_us={fold_us:.1f};"
              f"fold_speedup={grid_us / max(fold_us, 1e-9):.2f}x;"
              f"pred_fold_speedup={pred_grid / max(pred_fold, 1e-12):.2f}x;"
              f"rank_agree={int((fold_us <= grid_us) == (pred_fold <= pred_grid))}")
@@ -131,7 +133,10 @@ def _db_head_to_head(p: TConvProblem, res) -> str:
     pred_sb = mm2im_estimate(p, 1, bits=32, **geom).t_overlapped
     pred_db = mm2im_db_estimate(p, 1, bits=32, **geom).t_overlapped
     agree = (sb_us <= db_us) == (pred_sb <= pred_db)
-    return (f"sb_us={sb_us:.1f};db_us={db_us:.1f};"
+    # geom= records the timed geometry so core/model_fit can replay this
+    # head-to-head exactly (no heuristic reconstruction needed).
+    return (f"geom=oh{d.block_oh}/oc{d.block_oc}/{d.grid_order};"
+            f"sb_us={sb_us:.1f};db_us={db_us:.1f};"
             f"db_vs_sb={sb_us / max(db_us, 1e-9):.2f}x;"
             f"pred_db_vs_sb={pred_sb / max(pred_db, 1e-12):.2f}x;"
             f"rank_agree={int(agree)}")
@@ -168,7 +173,9 @@ def main() -> None:
              f"plan=oh{pl.block_oh}/oc{pl.block_oc}/{pl.grid_order}"
              f"/{pl.method or 'mm2im'};"
              f"cands={res.n_candidates};timed={res.n_measured}")
-        emit(name + "_dbcmp", 0.0, _db_head_to_head(p, res))
+        # Derived-only row (the head-to-head times live in the derived
+        # string): us_per_call=None, not a fake measured 0.0us.
+        emit(name + "_dbcmp", None, _db_head_to_head(p, res))
 
     # Cross-process round-trip: a brand-new cache object must see every key.
     fresh = PlanCache(cache_path)
@@ -176,7 +183,7 @@ def main() -> None:
     assert not missing, f"cache round-trip lost keys: {missing}"
     su = np.array([r.speedup_vs_default for r in results])
     n_db = sum(1 for r in results if r.plan.method == "mm2im_db")
-    emit("autotune_summary", 0.0,
+    emit("autotune_summary", None,
          f"n={len(results)};geomean_speedup={np.exp(np.log(su).mean()):.2f}x;"
          f"db_winners={n_db};cache_entries={len(fresh)};cache={cache_path}")
 
@@ -223,7 +230,7 @@ def main() -> None:
                  ).astype(np.float32)
             np.asarray(tconv(x, w, stride=p.stride, padding=p.padding))
         tiers = [t for _, _, t in ops.consumed_plans()]
-        emit("autotune_tier_hits", 0.0,
+        emit("autotune_tier_hits", None,
              f"probed={len(probe)};"
              f"user_cache={tiers.count(autotune.TIER_USER_CACHE)};"
              f"shipped_table={tiers.count(autotune.TIER_SHIPPED)};"

@@ -18,14 +18,14 @@ from repro.core.maps import TConvProblem, drop_stats
 def main() -> None:
     # Fig. 2 worked example.
     ex = drop_stats(TConvProblem(2, 2, 2, 3, 2, 1))
-    emit("fig2_example_drop_rate", 0.0,
+    emit("fig2_example_drop_rate", None,
          f"D_r={ex['D_r']:.3f};paper=0.55;P/F={ex['buffer_saving_no_skip']:.2f}"
          f";skip={ex['buffer_saving_with_skip']:.2f}")
 
     # Fig. 1: model layers.
     for row in TABLE_II:
         st = drop_stats(row.problem)
-        emit(f"fig1_drop_{row.name}", 0.0,
+        emit(f"fig1_drop_{row.name}", None,
              f"D_r={st['D_r']:.3f};eff_frac={st['effectual_fraction']:.3f}")
 
     # Fig. 7: synthetic sweep grouped by (Ks, S).
@@ -33,7 +33,7 @@ def main() -> None:
     for p in synthetic_sweep():
         groups.setdefault((p.ks, p.stride), []).append(drop_stats(p)["D_r"])
     for (ks, s), v in sorted(groups.items()):
-        emit(f"fig7_drop_ks{ks}_s{s}", 0.0,
+        emit(f"fig7_drop_ks{ks}_s{s}", None,
              f"mean_D_r={np.mean(v):.3f};n={len(v)}")
 
 

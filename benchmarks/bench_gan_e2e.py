@@ -73,7 +73,7 @@ def measured_cpu() -> None:
         if m == "mm2im_db":
             # Pipelined variant: interpret-mode wall time is meaningless,
             # but the e2e output must be bit-identical to 'mm2im'.
-            emit("tableIV_dcgan_cpu_mm2im_db", 0.0,
+            emit("tableIV_dcgan_cpu_mm2im_db", None,
                  f"bitident_vs_mm2im={int((outs[m] == outs['mm2im']).all())}")
         elif m != "mm2im":
             us = time_fn(fn, z, repeats=3)

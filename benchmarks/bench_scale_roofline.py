@@ -54,7 +54,7 @@ def main(path: str = None) -> None:
             f = pathlib.Path(cand)
             break
     if f is None:
-        emit("roofline_skipped", 0.0,
+        emit("roofline_skipped", None,
              "no dry-run JSON; run launch.dryrun --all --both")
         return
     rows = json.load(f.open())

@@ -25,10 +25,21 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 1, **kw) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+def emit(name: str, us_per_call, derived: str = "") -> None:
+    """Record one benchmark row (CSV line + JSON capture).
+
+    ``us_per_call=None`` marks a derived-only row (comparisons, modeled
+    numbers) where no wall-clock call was measured: the JSON artifact
+    stores ``null`` — a literal ``0.0`` would read as a measured
+    zero-microsecond call — while the CSV line keeps printing ``0.0``
+    so downstream column parsing is unchanged.
+    """
+    _ROWS.append({"name": name,
+                  "us_per_call": None if us_per_call is None
+                  else float(us_per_call),
                   "derived": derived})
-    print(f"{name},{us_per_call:.1f},{derived}")
+    print(f"{name},{0.0 if us_per_call is None else us_per_call:.1f},"
+          f"{derived}")
 
 
 def rows() -> list[dict]:

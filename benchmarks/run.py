@@ -36,13 +36,28 @@ MODULES = [
 ]
 
 
+def _parse_value(v: str):
+    """Best-effort typed parse: int, then float, then the raw string.
+
+    The distilled JSON previously shipped every derived value as a string
+    (``tier_hits`` counts as ``"0"``/``"5"``), which made downstream
+    consumers re-parse — and silently compare strings.
+    """
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
 def _parse_derived(derived: str) -> dict:
-    """'k=v;k=v' derived strings -> dict (values kept as strings)."""
+    """'k=v;k=v' derived strings -> dict with numeric values typed."""
     out = {}
     for part in derived.split(";"):
         if "=" in part:
             k, _, v = part.partition("=")
-            out[k] = v
+            out[k] = _parse_value(v)
     return out
 
 
@@ -60,7 +75,11 @@ def mm2im_summary(rows: list) -> dict:
     * ``tier_hits`` — the parsed ``autotune_tier_hits`` attribution;
     * ``modeled_fold`` — tile-quantized folded-vs-grid utilization on the
       batch-8 Table II rows straight from ``core/perf_model`` (no
-      benchmarking required, so the field never goes empty).
+      benchmarking required, so the field never goes empty);
+    * ``rank_agreement`` — predicted-vs-measured ordering over this run's
+      recorded head-to-heads (``core/model_fit.rank_agreement``), scored
+      with the shipped per-backend calibration when one exists.  This is
+      the section ``tools/bench_gate.py`` hard-gates on.
     """
     methods = {}
     autotune_rows = []
@@ -90,8 +109,17 @@ def mm2im_summary(rows: list) -> dict:
             "fold_mxu_util": round(f.mxu_utilization, 4),
             "fold_speedup": round(g.t_overlapped / f.t_overlapped, 3),
         }
+    rank = None
+    if autotune_rows:
+        from repro.core import model_fit
+
+        pairs = model_fit.pairs_from_bench({"autotune": autotune_rows})
+        if pairs:
+            rank = model_fit.rank_agreement(pairs, model_fit.shipped_fit())
+
     return {"methods": methods, "autotune": autotune_rows,
-            "tier_hits": tier_hits, "modeled_fold_b8": modeled}
+            "tier_hits": tier_hits, "modeled_fold_b8": modeled,
+            "rank_agreement": rank}
 
 
 def main() -> None:

@@ -11,10 +11,14 @@ with a measure-don't-guess loop:
      single-buffered kernel and the double-buffered DMA pipeline
      (``kernels/mm2im_db_pallas``), which are bit-identical, so the choice
      is purely empirical;
-  2. **prune** — rank candidates by the analytical roofline
-     (``core/perf_model.mm2im_estimate`` / ``mm2im_db_estimate``,
-     including the overlapped-copy term) and keep the top few, always
-     including the heuristic default;
+  2. **prune** — rank candidates by the cost model and keep the top few,
+     always including the heuristic default.  When a shipped calibration
+     exists for this backend (``core/model_fit.py`` — coefficients fit
+     from persisted sweep measurements), ranking uses the fitted
+     microsecond predictions and fewer survivors are timed; otherwise
+     the datasheet roofline (``core/perf_model.mm2im_estimate`` /
+     ``mm2im_db_estimate``, including the overlapped-copy term) orders
+     the field;
   3. **measure** — wall-time the survivors **through the kernel registry**
      (``kernels.ops.run_registered`` — Pallas TPU kernels on TPU,
      interpret mode elsewhere), with the same epilogue-splitting contract
@@ -66,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling
+from repro.core import model_fit, tiling
 from repro.core.epilogue import Epilogue
 from repro.core.maps import TConvProblem
 from repro.core.perf_model import HW, V5E, mm2im_db_estimate, mm2im_estimate
@@ -337,14 +341,25 @@ def autotune_result(
     dtype=jnp.float32,
     hw: HW = V5E,
     cache: Union[PlanCache, str, Path, None] = None,
-    max_measure: int = 6,
+    max_measure: Optional[int] = None,
     repeats: int = 3,
     force: bool = False,
+    fit="auto",
 ) -> TuningResult:
     """Enumerate -> prune -> measure -> persist; full diagnostics returned.
 
     ``cache`` may be a :class:`PlanCache`, a path, or None (default
     location).  ``force=True`` re-measures even on a cache hit.
+
+    ``fit`` selects the pruning model: ``"auto"`` (default) uses the
+    shipped per-backend calibration (``core/model_fit.shipped_fit``) when
+    one exists, an explicit :class:`~repro.core.model_fit.FittedHW` uses
+    that, and None forces the uncalibrated datasheet roofline.
+    ``max_measure=None`` adapts to the model's trustworthiness: 4 timed
+    survivors under a calibration, 6 under the bare roofline — the whole
+    point of fitting coefficients from sweep measurements is that the
+    a-priori ranking stops discarding true winners (the recorded sb/db
+    and fold/grid misranks), so fewer candidates need wall-timing.
     """
     if not isinstance(cache, PlanCache):
         cache = PlanCache(cache)
@@ -372,12 +387,20 @@ def autotune_result(
     if dflt not in plans:
         plans.append(dflt)
 
-    # Prune by the analytical roofline (overlapped-copy term + MXU tile
-    # quantization included, so single- vs double-buffered and folded vs
-    # grid-batch candidates all rank against each other a priori); keep
-    # the default in the field so the measurement is always at least a
-    # default-vs-challenger comparison.
+    # Prune by the model — the measurement-calibrated one when available
+    # (core/model_fit.py), the datasheet roofline otherwise (overlapped-
+    # copy term + MXU tile quantization included, so single- vs
+    # double-buffered and folded vs grid-batch candidates all rank
+    # against each other a priori); keep the default in the field so the
+    # measurement is always at least a default-vs-challenger comparison.
+    if fit == "auto":
+        fit = model_fit.shipped_fit()
+    if max_measure is None:
+        max_measure = 4 if fit is not None else 6
+
     def score(pl: Plan) -> float:
+        if fit is not None:
+            return fit.predict_us(p, pl, batch=batch, bits=bits, hw=hw)
         est = METHOD_ESTIMATORS.get(pl.method or "mm2im", mm2im_estimate)
         return est(p, batch, block_oh=pl.block_oh, block_oc=pl.block_oc,
                    bits=bits, grid_order=pl.grid_order, hw=hw,
@@ -407,6 +430,10 @@ def autotune_result(
         # invocation happened to use.
         "backend": jax.default_backend(), "repeats": repeats,
         "jax": jax.__version__,
+        # Whether a fitted calibration pruned the field (model_fit) —
+        # distinguishes "ranked by measured coefficients" entries from
+        # datasheet-roofline ones when auditing a cache.
+        "calibrated": fit is not None,
     })
     return result
 

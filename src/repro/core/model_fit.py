@@ -1,0 +1,621 @@
+"""Calibrated perf-model coefficients fit from persisted measurements.
+
+The analytical model (``core/perf_model.py``) has the right *vocabulary*
+— issued MXU tiles, HBM traffic, pipeline fill, kernel launches — but
+datasheet constants for the coefficients, and the recorded trajectory
+shows what that costs: ``BENCH_mm2im.json`` shipped head-to-heads where
+the double-buffered variant was predicted 1.06x faster and measured
+0.22x, and batch folding predicted 6.93x and measured 0.62x
+(``rank_agree=0``), so the autotuner's a-priori pruning could discard the
+true winner before ever timing it.  The paper's own model earns its §V-F
+"within 10%" only because it is calibrated against the target; EcoFlow
+makes the same point for dataflow cost models generally, and GANAX's
+irregular-vs-dense phase split is why a single constant per term misranks
+across dataflow *regimes*.
+
+This module closes the gap with a measurement-driven calibration layer:
+
+1. **collect** — every tuned-plan cache / shipped table entry already
+   persists a measured ``us`` for its winning plan and for the heuristic
+   default (``core/autotune.py`` stamps them), and the distilled
+   ``BENCH_mm2im.json`` records the sb-vs-db and folded-vs-grid
+   head-to-heads.  :func:`samples_from_store` / :func:`pairs_from_bench`
+   parse both back into ``(problem, plan, batch, bits, us)`` samples.
+2. **fit** — one small nonnegative least-squares per dataflow regime
+   ``(method, fold_batch)`` over the model's raw terms: per-MXU-tile
+   cost, effective HBM cost per byte, a fill (non-overlappable copy)
+   multiplier, per-launch overhead, and a constant.  Per-regime because
+   the regimes stress the backend differently (GANAX: irregular scatter
+   vs dense MatMul phases) — interpret-mode CPU and real TPU disagree
+   wildly on what a slab DMA costs.
+3. **persist** — a :class:`FittedHW` record with provenance, stored next
+   to the shipped plan tables (``src/repro/data/plans/<backend>.fit.json``)
+   and loaded per-backend (:func:`shipped_fit`) the same way plan tables
+   are.
+4. **consume** — ``core/autotune.py`` ranks candidates with
+   :meth:`FittedHW.predict_us` when a calibration is available (falling
+   back to the uncalibrated roofline), which is what makes a small
+   ``max_measure`` trustworthy; :func:`rank_agreement` scores predicted
+   vs measured *order* (plus magnitude error) over recorded
+   head-to-heads, and ``tools/bench_gate.py`` turns that score into a CI
+   gate.
+
+Nothing here ever measures: fitting replays persisted numbers only, so
+``tools/tune_sweep.py --fit`` is safe on a resumed cache (zero
+re-measurements by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import re
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.maps import TConvProblem
+from repro.core.perf_model import HW, V5E, estimate_for_plan
+from repro.kernels.registry import Plan
+
+FIT_VERSION = 1
+FIT_DIR_ENV = "REPRO_MODEL_FIT_DIR"
+#: Coefficient feature order (matches :func:`features`).
+FEATURES = ("issued_tiles", "hbm_bytes", "fill_bytes", "n_launches", "const")
+#: provenance keys every shipped fit must carry.
+REQUIRED_PROVENANCE = ("backend", "jax", "created", "n_samples")
+#: A regime with fewer samples than this falls back to the global fit.
+MIN_REGIME_SAMPLES = 4
+
+_DTYPE_BITS = {"float32": 32, "f32": 32, "bfloat16": 16, "bf16": 16,
+               "float16": 16, "int8": 8}
+
+# The batch-8 DCGAN layer-1 shape the fold head-to-head benches use
+# (benchmarks/bench_autotune.fold_head_to_head) — needed to replay old
+# BENCH docs whose derived strings predate the explicit prob=/geom= keys.
+_FOLD_BENCH_PROBLEM = TConvProblem(4, 4, 256, 5, 128, 2)
+_FOLD_BENCH_GEOM = {"mm2im": Plan(8, 128, "bcj", "mm2im"),
+                    "mm2im_db": Plan(4, 128, "bcj", "mm2im_db")}
+
+
+def parse_cache_key(key: str) -> Tuple[TConvProblem, str, str, int]:
+    """Inverse of ``autotune.cache_key``: key -> (problem, dtype, hw, batch)."""
+    head, dt, hw, b = key.split("|")
+    m = re.fullmatch(r"tconv:ih(\d+):iw(\d+):ic(\d+):ks(\d+):oc(\d+)"
+                     r":s(\d+):(\w+)", head)
+    if m is None or not b.startswith("b"):
+        raise ValueError(f"unparseable cache key: {key!r}")
+    ih, iw, ic, ks, oc, s = (int(g) for g in m.groups()[:6])
+    return TConvProblem(ih, iw, ic, ks, oc, s, m.group(7)), dt, hw, int(b[1:])
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One persisted measurement: a plan run on a problem took ``us``."""
+
+    problem: TConvProblem
+    plan: Plan
+    batch: int
+    bits: int
+    us: float
+    source: str = ""
+
+    @property
+    def regime(self) -> Tuple[str, bool]:
+        return (self.plan.method or "mm2im", bool(self.plan.fold_batch))
+
+
+@dataclasses.dataclass(frozen=True)
+class RankPair:
+    """A recorded head-to-head: variant ``a`` vs ``b`` on one problem."""
+
+    name: str
+    problem: TConvProblem
+    batch: int
+    bits: int
+    plan_a: Plan
+    plan_b: Plan
+    us_a: float
+    us_b: float
+
+    @property
+    def measured_ratio(self) -> float:
+        """t_a / t_b — > 1 means variant ``b`` measured faster."""
+        return self.us_a / max(self.us_b, 1e-9)
+
+    def samples(self) -> Tuple[Sample, Sample]:
+        return (Sample(self.problem, self.plan_a, self.batch, self.bits,
+                       self.us_a, source=self.name),
+                Sample(self.problem, self.plan_b, self.batch, self.bits,
+                       self.us_b, source=self.name))
+
+
+def features(p: TConvProblem, plan: Plan, *, batch: int = 1, bits: int = 32,
+             hw: HW = V5E) -> np.ndarray:
+    """Raw cost-model terms for one (problem, plan) — :data:`FEATURES` order."""
+    e = estimate_for_plan(p, batch, plan=plan, bits=bits, hw=hw)
+    return np.array([float(e.issued_tiles), float(e.hbm_bytes),
+                     float(e.fill_bytes), float(e.n_launches), 1.0])
+
+
+def samples_from_entries(entries: Dict[str, dict], *,
+                         backend: Optional[str] = None,
+                         source: str = "") -> List[Sample]:
+    """Samples from PlanCache/PlanTable ``entries`` (winner + default).
+
+    Every tuned entry carries the winning plan's measured ``us`` and the
+    heuristic default's ``default_us`` under the same key — two samples
+    per entry.  Entries stamped with a different ``backend`` than
+    requested are skipped (their microseconds are another machine's);
+    entries without timings (imported tables) contribute nothing.
+    """
+    out: List[Sample] = []
+    for key, e in entries.items():
+        if backend is not None and e.get("backend") not in (None, backend):
+            continue
+        try:
+            p, dt, _hw, batch = parse_cache_key(key)
+        except ValueError:
+            continue
+        bits = _DTYPE_BITS.get(dt)
+        if bits is None:
+            continue
+        for plan_field, us_field in (("plan", "us"),
+                                     ("default_plan", "default_us")):
+            us = e.get(us_field)
+            pd = e.get(plan_field)
+            if us is None or pd is None or not math.isfinite(float(us)):
+                continue
+            try:
+                plan = Plan.from_json(pd)
+            except Exception:
+                continue
+            out.append(Sample(p, plan, batch, bits, float(us),
+                              source=source or key))
+    return out
+
+
+def samples_from_store(path: Union[str, Path], *,
+                       backend: Optional[str] = None) -> List[Sample]:
+    """Samples from an on-disk plan cache or shipped plan table."""
+    path = Path(path)
+    raw = json.loads(path.read_text())
+    return samples_from_entries(raw.get("entries", {}), backend=backend,
+                                source=str(path))
+
+
+# ---------------------------------------------------------------------------
+# Recorded head-to-heads (the distilled BENCH_mm2im.json rows).
+# ---------------------------------------------------------------------------
+
+def _parse_derived_str(derived: str) -> Dict[str, str]:
+    return {k: v for part in derived.split(";") if "=" in part
+            for k, _, v in [part.partition("=")]}
+
+
+def _parse_geom(d: Dict[str, str], method: str,
+                fold: bool = False) -> Optional[Plan]:
+    m = re.fullmatch(r"oh(\d+)/oc(\d+)/(\w+)", d.get("geom", ""))
+    if m is None:
+        return None
+    return Plan(int(m.group(1)), int(m.group(2)), m.group(3), method, fold)
+
+
+def _default_geometry(p: TConvProblem, batch: int) -> Plan:
+    # Lazy import: tiling imports perf_model; keep this module cycle-free.
+    from repro.core import tiling
+
+    tp = tiling.plan(p, batch=batch, bits=32)
+    return Plan(tp.block_oh, tp.block_oc, tp.grid_order)
+
+
+def pairs_from_bench(doc: dict) -> List[RankPair]:
+    """Head-to-head pairs recorded in a ``BENCH_mm2im.json``-style doc.
+
+    Two row families carry a measured A-vs-B comparison at identical
+    geometry (``benchmarks/bench_autotune.py`` emits both):
+
+    * ``autotune_ih*_..._dbcmp`` — single- vs double-buffered at the
+      heuristic default geometry (``sb_us`` / ``db_us``);
+    * ``autotune_fold_dcgan1_<method>`` — grid-batch vs folded at fixed
+      geometry (``grid_us`` / ``fold_us``).
+
+    Newer docs embed the timed geometry (``geom=ohX/ocY/<order>``); for
+    older docs the dbcmp geometry is recomputed from the heuristic (it is
+    deterministic for a given problem) and the fold geometry falls back
+    to the benchmark's fixed constants.  All these rows are measured at
+    float32 (``autotune.measure_plan``'s default dtype).
+    """
+    pairs: List[RankPair] = []
+    for r in doc.get("autotune", []):
+        name = r.get("name", "")
+        d = _parse_derived_str(r.get("derived", ""))
+        m = re.fullmatch(r"autotune_ih(\d+)_ic(\d+)_ks(\d+)_oc(\d+)"
+                         r"_s(\d+)_dbcmp", name)
+        if m and "sb_us" in d and "db_us" in d:
+            ih, ic, ks, oc, s = (int(g) for g in m.groups())
+            p = TConvProblem(ih, ih, ic, ks, oc, s)
+            geom = _parse_geom(d, "mm2im") or _default_geometry(p, 1)
+            pa = Plan(geom.block_oh, geom.block_oc, geom.grid_order, "mm2im")
+            pb = Plan(geom.block_oh, geom.block_oc, geom.grid_order,
+                      "mm2im_db")
+            pairs.append(RankPair(name, p, 1, 32, pa, pb,
+                                  float(d["sb_us"]), float(d["db_us"])))
+            continue
+        m = re.fullmatch(r"autotune_fold_dcgan1_(mm2im(?:_db)?)", name)
+        if m and "grid_us" in d and "fold_us" in d:
+            method = m.group(1)
+            p = _FOLD_BENCH_PROBLEM
+            batch = int(d.get("batch", 8))
+            geom = (_parse_geom(d, method)
+                    or _FOLD_BENCH_GEOM.get(method))
+            if geom is None:
+                continue
+            pa = Plan(geom.block_oh, geom.block_oc, geom.grid_order, method)
+            pb = Plan(geom.block_oh, geom.block_oc, geom.grid_order, method,
+                      fold_batch=True)
+            pairs.append(RankPair(name, p, batch, 32, pa, pb,
+                                  float(d["grid_us"]), float(d["fold_us"])))
+    return pairs
+
+
+def samples_from_bench(doc: dict) -> List[Sample]:
+    """Flatten a doc's head-to-head pairs into fit samples."""
+    out: List[Sample] = []
+    for pair in pairs_from_bench(doc):
+        out.extend(pair.samples())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The fit itself.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Coeffs:
+    """Fitted cost coefficients for one dataflow regime (all in us).
+
+    ``us_per_byte`` is the reciprocal of the backend's *effective* HBM
+    bandwidth; ``us_per_fill_byte`` the fill (non-overlappable copy)
+    multiplier; ``us_per_tile`` the per-issued-MXU-tile cost;
+    ``us_per_launch`` the per-kernel-launch overhead.  Nonnegative by
+    construction (the fit clips at zero).
+    """
+
+    us_per_tile: float = 0.0
+    us_per_byte: float = 0.0
+    us_per_fill_byte: float = 0.0
+    us_per_launch: float = 0.0
+    us_const: float = 0.0
+    n_samples: int = 0
+    mean_abs_log_err: float = float("nan")
+
+    @property
+    def vector(self) -> np.ndarray:
+        return np.array([self.us_per_tile, self.us_per_byte,
+                         self.us_per_fill_byte, self.us_per_launch,
+                         self.us_const])
+
+    @property
+    def effective_hbm_gbps(self) -> float:
+        """Fitted effective HBM bandwidth (GB/s); inf when memory is free."""
+        return (float("inf") if self.us_per_byte <= 0
+                else 1.0 / (self.us_per_byte * 1e3))
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        if math.isnan(self.mean_abs_log_err):
+            d["mean_abs_log_err"] = None
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Coeffs":
+        kw = {f.name: d[f.name] for f in dataclasses.fields(cls)
+              if f.name in d}
+        if kw.get("mean_abs_log_err") is None:
+            kw["mean_abs_log_err"] = float("nan")
+        return cls(**kw)
+
+
+def _nnls(X: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Nonnegative least squares by iterative negative-column dropping.
+
+    Column-scaled for conditioning (bytes dwarf tile counts).  Not the
+    full Lawson–Hanson active-set dance, but deterministic, dependency
+    free, and exact whenever the unconstrained optimum is interior or a
+    single face away — which these four-term fits are in practice.
+    """
+    scale = np.maximum(np.abs(X).max(axis=0), 1e-12)
+    Xs = X / scale
+    cols = list(range(X.shape[1]))
+    while True:
+        sol, *_ = np.linalg.lstsq(Xs[:, cols], y, rcond=None)
+        if (sol >= -1e-12).all() or len(cols) == 1:
+            break
+        cols = [c for c, v in zip(cols, sol) if v > 0] or [cols[:1][0]]
+    full = np.zeros(X.shape[1])
+    full[cols] = np.clip(sol, 0.0, None)
+    return full / scale
+
+
+_GLOBAL_REGIME = "*"
+
+
+def _regime_key(method: str, fold: bool) -> str:
+    return f"{method}+fold" if fold else method
+
+
+def _fit_one(samples: Sequence[Sample], hw: HW) -> Coeffs:
+    X = np.stack([features(s.problem, s.plan, batch=s.batch, bits=s.bits,
+                           hw=hw) for s in samples])
+    y = np.array([s.us for s in samples])
+    coef = _nnls(X, y)
+    pred = np.maximum(X @ coef, 1e-9)
+    return Coeffs(*(float(c) for c in coef), n_samples=len(samples),
+                  mean_abs_log_err=float(np.abs(np.log(pred / y)).mean()))
+
+
+@dataclasses.dataclass(frozen=True)
+class FittedHW:
+    """Per-backend calibrated cost model: regime -> :class:`Coeffs`.
+
+    ``regimes`` keys are ``'<method>'`` / ``'<method>+fold'`` plus the
+    ``'*'`` global fallback fit over every sample, so ``predict_us``
+    always returns a finite, mutually comparable score — a third-party
+    kernel variant with no samples ranks with the global coefficients,
+    not a different unit system.
+    """
+
+    backend: str
+    hw_name: str
+    regimes: Dict[str, Coeffs]
+    provenance: dict
+
+    def coeffs_for(self, method: Optional[str],
+                   fold: bool = False) -> Coeffs:
+        key = _regime_key(method or "mm2im", fold)
+        c = self.regimes.get(key)
+        if c is None or c.n_samples < MIN_REGIME_SAMPLES:
+            c = self.regimes.get(_GLOBAL_REGIME, c) or Coeffs()
+        return c
+
+    def predict_us(self, p: TConvProblem, plan: Plan, *, batch: int = 1,
+                   bits: int = 32, hw: HW = V5E) -> float:
+        """Calibrated wall-time prediction (us) for a plan on a problem."""
+        c = self.coeffs_for(plan.method, plan.fold_batch)
+        return float(features(p, plan, batch=batch, bits=bits, hw=hw)
+                     @ c.vector)
+
+    def to_json(self) -> dict:
+        return {"version": FIT_VERSION, "backend": self.backend,
+                "hw": self.hw_name, "provenance": dict(self.provenance),
+                "regimes": {k: c.to_json()
+                            for k, c in sorted(self.regimes.items())}}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FittedHW":
+        if d.get("version") != FIT_VERSION:
+            raise ValueError(f"unsupported fit version {d.get('version')!r}")
+        return cls(backend=str(d.get("backend", "")),
+                   hw_name=str(d.get("hw", V5E.name)),
+                   regimes={k: Coeffs.from_json(v)
+                            for k, v in d.get("regimes", {}).items()},
+                   provenance=dict(d.get("provenance", {})))
+
+
+def fit_coefficients(samples: Iterable[Sample], *, backend: str,
+                     hw: HW = V5E, note: str = "",
+                     sources: Sequence[str] = ()) -> FittedHW:
+    """Per-regime + global NNLS over measured samples -> :class:`FittedHW`.
+
+    Plain absolute-error least squares, deliberately: the large problems
+    are where misranks cost real time, and relative weighting lets the
+    sub-millisecond tail outvote them (that is exactly how the recorded
+    fold-db misrank survived the uncalibrated model's sanity checks).
+    """
+    samples = list(samples)
+    if not samples:
+        raise ValueError("no samples to fit (empty caches / bench docs?)")
+    import jax
+
+    groups: Dict[str, List[Sample]] = {_GLOBAL_REGIME: samples}
+    for s in samples:
+        groups.setdefault(_regime_key(*s.regime), []).append(s)
+    regimes = {key: _fit_one(group, hw) for key, group in groups.items()
+               if len(group) >= min(MIN_REGIME_SAMPLES, len(samples))}
+    prov = {"backend": backend, "jax": jax.__version__,
+            "created": time.time(), "n_samples": len(samples),
+            "sources": list(sources), "note": note}
+    return FittedHW(backend=backend, hw_name=hw.name, regimes=regimes,
+                    provenance=prov)
+
+
+# ---------------------------------------------------------------------------
+# Rank agreement — the score CI gates on.
+# ---------------------------------------------------------------------------
+
+#: Measured ratios closer to 1 than this band are non-decisive: interpret
+#: mode times sub-millisecond candidates with repeats=2-3 on shared CPUs,
+#: so ordering inside the band is noise, not signal.
+DECISIVE_BAND = 1.5
+
+
+def _predict(pair: RankPair, plan: Plan, fit: Optional[FittedHW],
+             hw: HW) -> float:
+    if fit is not None:
+        return fit.predict_us(pair.problem, plan, batch=pair.batch,
+                              bits=pair.bits, hw=hw)
+    return estimate_for_plan(pair.problem, pair.batch, plan=plan,
+                             bits=pair.bits, hw=hw).t_overlapped * 1e6
+
+
+def rank_agreement(pairs: Sequence[RankPair], fit: Optional[FittedHW] = None,
+                   *, hw: HW = V5E,
+                   decisive_band: float = DECISIVE_BAND) -> dict:
+    """Score predicted vs measured ordering over recorded head-to-heads.
+
+    Per pair: the model (fitted when ``fit`` is given, else the
+    uncalibrated roofline) predicts both sides; ``agree`` is order
+    correctness, ``abs_log2_err`` the magnitude error between predicted
+    and measured ratio — the old per-row ``rank_agree`` flag checked the
+    sign only, which is how "predicted 7.09x, measured 1.36x" passed as
+    agreement.  Pairs whose measured ratio is within ``decisive_band`` of
+    1.0 are scored but not *decisive*: ordering noise-level candidates is
+    not a model failure.  Aggregates:
+
+    * ``rank_score`` — agreeing fraction over all pairs;
+    * ``decisive_score`` — agreeing fraction over decisive pairs (the CI
+      hard-gate metric);
+    * ``n_misranks`` — decisive disagreements (hard-gate count);
+    * ``mean_abs_log2_err`` — magnitude error, all pairs.
+    """
+    rows = []
+    for pair in pairs:
+        pred_a = _predict(pair, pair.plan_a, fit, hw)
+        pred_b = _predict(pair, pair.plan_b, fit, hw)
+        pred_ratio = pred_a / max(pred_b, 1e-9)
+        meas_ratio = pair.measured_ratio
+        agree = (pred_ratio >= 1.0) == (meas_ratio >= 1.0)
+        decisive = max(meas_ratio, 1.0 / max(meas_ratio, 1e-9)) \
+            >= decisive_band
+        rows.append({
+            "name": pair.name,
+            "measured_ratio": round(meas_ratio, 4),
+            "predicted_ratio": round(pred_ratio, 4),
+            "agree": bool(agree),
+            "decisive": bool(decisive),
+            "abs_log2_err": round(abs(math.log2(
+                max(pred_ratio, 1e-9) / max(meas_ratio, 1e-9))), 4),
+        })
+    n = len(rows)
+    dec = [r for r in rows if r["decisive"]]
+    agree_all = sum(r["agree"] for r in rows)
+    agree_dec = sum(r["agree"] for r in dec)
+    return {
+        "calibrated": fit is not None,
+        "decisive_band": decisive_band,
+        "n_pairs": n,
+        "n_agree": agree_all,
+        "rank_score": round(agree_all / n, 4) if n else None,
+        "n_decisive": len(dec),
+        "decisive_agree": agree_dec,
+        "decisive_score": (round(agree_dec / len(dec), 4) if dec else None),
+        "n_misranks": len(dec) - agree_dec,
+        "mean_abs_log2_err": (round(
+            float(np.mean([r["abs_log2_err"] for r in rows])), 4)
+            if rows else None),
+        "pairs": rows,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Persistence next to the shipped plan tables.
+# ---------------------------------------------------------------------------
+
+def fit_dir() -> Path:
+    """Directory holding ``<backend>.fit.json`` (default: the plan tables')."""
+    env = os.environ.get(FIT_DIR_ENV)
+    if env:
+        return Path(env).expanduser()
+    from repro.core.plan_table import table_dir
+
+    return table_dir()
+
+
+def fit_path(backend: str, directory: Union[str, Path, None] = None) -> Path:
+    return (Path(directory) if directory else fit_dir()) \
+        / f"{backend}.fit.json"
+
+
+def validate_fit_json(raw: object, *, source: str = "fit") -> List[str]:
+    """Schema-check one parsed fit doc; returns problems (empty == valid)."""
+    errs: List[str] = []
+    if not isinstance(raw, dict):
+        return [f"{source}: top level must be an object"]
+    if raw.get("version") != FIT_VERSION:
+        errs.append(f"{source}: version must be {FIT_VERSION}, "
+                    f"got {raw.get('version')!r}")
+    prov = raw.get("provenance")
+    if not isinstance(prov, dict):
+        errs.append(f"{source}: missing 'provenance' object")
+    else:
+        for field in REQUIRED_PROVENANCE:
+            if field not in prov:
+                errs.append(f"{source}: provenance missing {field!r}")
+    regimes = raw.get("regimes")
+    if not isinstance(regimes, dict) or not regimes:
+        errs.append(f"{source}: missing non-empty 'regimes' object")
+        return errs
+    if _GLOBAL_REGIME not in regimes:
+        errs.append(f"{source}: missing the '{_GLOBAL_REGIME}' global "
+                    f"fallback regime")
+    for key, c in regimes.items():
+        where = f"{source}: regimes[{key!r}]"
+        if not isinstance(c, dict):
+            errs.append(f"{where}: must be an object")
+            continue
+        for f in ("us_per_tile", "us_per_byte", "us_per_fill_byte",
+                  "us_per_launch", "us_const"):
+            v = c.get(f)
+            if not isinstance(v, (int, float)) or v < 0:
+                errs.append(f"{where}: {f!r} must be a nonnegative number")
+    return errs
+
+
+def save_fit(fit: FittedHW, path: Union[str, Path]) -> Path:
+    path = Path(path)
+    doc = fit.to_json()
+    errs = validate_fit_json(doc, source=str(path))
+    if errs:
+        raise ValueError("refusing to save an invalid fit:\n  "
+                         + "\n  ".join(errs))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def load_fit(path: Union[str, Path], *,
+             strict: bool = False) -> Optional[FittedHW]:
+    """Parse + validate one fit file; None when absent/invalid (lenient)."""
+    path = Path(path)
+    try:
+        raw = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        if strict:
+            raise ValueError(f"{path}: {e}") from None
+        return None
+    errs = validate_fit_json(raw, source=str(path))
+    if errs:
+        if strict:
+            raise ValueError("invalid model fit:\n  " + "\n  ".join(errs))
+        return None
+    return FittedHW.from_json(raw)
+
+
+_SHIPPED_FITS: dict = {}  # backend -> Optional[FittedHW] (per-process memo)
+
+
+def shipped_fit(backend: Optional[str] = None) -> Optional[FittedHW]:
+    """The shipped calibration for ``backend`` (default: the JAX backend).
+
+    Memoized like ``plan_table.shipped_table`` — fits are immutable
+    release artifacts.  None when no calibration ships for this backend;
+    consumers then fall back to the uncalibrated roofline, so a missing
+    or invalid fit can never break tuning.
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    if backend not in _SHIPPED_FITS:
+        _SHIPPED_FITS[backend] = load_fit(fit_path(backend))
+    return _SHIPPED_FITS[backend]
+
+
+def reset_shipped_fits() -> None:
+    """Drop the memo (tests; after pointing REPRO_MODEL_FIT_DIR elsewhere)."""
+    _SHIPPED_FITS.clear()

@@ -73,6 +73,13 @@ class Estimate:
     issued_macs: int = 0
     effectual_macs: int = 0
     hbm_bytes: int = 0
+    # Raw cost-model terms, exposed for coefficient fitting
+    # (core/model_fit.py): the calibration layer regresses measured wall
+    # time against (issued_tiles, hbm_bytes, fill_bytes, n_launches)
+    # instead of the hardware-datasheet-derived t_* seconds above.
+    n_launches: int = 0
+    fill_bytes: int = 0
+    issued_tiles: int = 0
 
     @property
     def t_overlapped(self) -> float:
@@ -241,6 +248,9 @@ def mm2im_estimate(
         issued_macs=issued,
         effectual_macs=eff,
         hbm_bytes=hbm,
+        n_launches=n_launches,
+        fill_bytes=fill_bytes,
+        issued_tiles=n_launches * tiles,
     )
 
 
@@ -272,6 +282,8 @@ def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
         issued_macs=macs,
         effectual_macs=drop_stats(p)["effectual_macs"] * batch,
         hbm_bytes=hbm,
+        n_launches=2 * batch,  # one MatMul + one col2im pass per element
+        issued_tiles=macs // hw.mxu_dim**3,
     )
 
 
@@ -293,6 +305,7 @@ def zero_insertion_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
         issued_macs=macs,
         effectual_macs=drop_stats(p)["effectual_macs"] * batch,
         hbm_bytes=hbm,
+        n_launches=batch,
     )
 
 
@@ -312,6 +325,7 @@ def tdc_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
         issued_macs=macs,
         effectual_macs=drop_stats(p)["effectual_macs"] * batch,
         hbm_bytes=hbm,
+        n_launches=p.stride**2 * batch,  # one conv pass per sub-kernel
     )
 
 
@@ -324,9 +338,53 @@ ESTIMATORS = {
 }
 
 
+#: Methods whose estimators accept the full plan-geometry kwargs
+#: (``block_oh``/``block_oc``/``grid_order``/``fold_batch``).
+PLAN_AWARE_METHODS = frozenset({"mm2im", "mm2im_db"})
+
+
+def estimate_for_plan(p: TConvProblem, batch: int = 1, *, plan=None,
+                      method: Optional[str] = None, bits: int = 8,
+                      hw: HW = V5E) -> Estimate:
+    """Estimate for the exact dataflow a concrete ``Plan`` selects.
+
+    ``plan`` is a :class:`repro.kernels.registry.Plan` (or None for the
+    heuristic default).  ``plan.method`` picks the estimator
+    (``method=`` overrides it — e.g. to model a non-MM2IM baseline);
+    the block geometry, grid order and ``fold_batch`` knob are threaded
+    through for the plan-aware MM2IM family, so the modeled time is the
+    time of the plan that actually runs, not the heuristic
+    single-buffered default.  Unknown registered methods fall back to the
+    single-buffered estimate (same convention as the autotuner's
+    :data:`repro.core.autotune.METHOD_ESTIMATORS`).
+    """
+    m = method or (plan.method if plan is not None and plan.method
+                   else "mm2im")
+    est = ESTIMATORS.get(m)
+    if est is None:  # third-party variant: rank with the sb estimate
+        est, m = mm2im_estimate, "mm2im"
+    if m in PLAN_AWARE_METHODS and plan is not None:
+        return est(p, batch, bits=bits, hw=hw,
+                   block_oh=plan.block_oh, block_oc=plan.block_oc,
+                   grid_order=plan.grid_order, fold_batch=plan.fold_batch)
+    return est(p, batch, bits=bits, hw=hw)
+
+
 def modeled_speedup(p: TConvProblem, batch: int = 1, *, bits: int = 8,
-                    baseline: str = "iom_unfused", hw: HW = V5E) -> float:
-    """Predicted MM2IM speedup over a baseline method (Fig. 6 analogue)."""
-    t_b = ESTIMATORS[baseline](p, batch, bits=bits, hw=hw).t_overlapped
-    t_m = mm2im_estimate(p, batch, bits=bits, hw=hw).t_overlapped
+                    baseline: str = "iom_unfused", hw: HW = V5E,
+                    plan=None, baseline_plan=None) -> float:
+    """Predicted speedup of a plan's dataflow over a baseline (Fig. 6).
+
+    Both sides of the ratio honour an explicit plan: ``plan`` selects the
+    MM2IM-side kernel variant (single- vs double-buffered), block
+    geometry and ``fold_batch`` — previously this side silently modeled
+    the heuristic single-buffered dataflow even when a tuned
+    double-buffered/folded plan was the one measured.  ``baseline_plan``
+    does the same for a plan-aware ``baseline`` method (ignored for the
+    unfused/direct baselines, which have no plan knobs).
+    """
+    t_b = estimate_for_plan(p, batch, plan=baseline_plan, method=baseline,
+                            bits=bits, hw=hw).t_overlapped
+    t_m = estimate_for_plan(p, batch, plan=plan, bits=bits,
+                            hw=hw).t_overlapped
     return t_b / t_m

@@ -88,10 +88,15 @@ def table_dir() -> Path:
 
 def available_backends(directory: Union[str, Path, None] = None
                        ) -> Tuple[str, ...]:
-    """Backends with a shipped table present (``cpu``, ``tpu``, ...)."""
+    """Backends with a shipped table present (``cpu``, ``tpu``, ...).
+
+    Calibration records (``<backend>.fit.json`` — ``core/model_fit.py``)
+    live in the same directory but are not plan tables; they are skipped.
+    """
     d = Path(directory) if directory else table_dir()
     try:
-        return tuple(sorted(f.stem for f in d.glob("*.json")))
+        return tuple(sorted(f.stem for f in d.glob("*.json")
+                            if not f.name.endswith(".fit.json")))
     except OSError:
         return ()
 

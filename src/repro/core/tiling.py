@@ -217,6 +217,43 @@ def candidate_plans(
     return out
 
 
+def rank_plans(p: TConvProblem, plans: Optional[List[TilePlan]] = None,
+               *, batch: int = 1, bits: int = 8, hw: HW = V5E,
+               fit=None) -> List[TilePlan]:
+    """Candidates sorted best-first by modeled cost, calibrated when possible.
+
+    ``fit`` is a :class:`~repro.core.model_fit.FittedHW` (measurement-
+    calibrated coefficients), ``"auto"`` to use the shipped calibration
+    for the current JAX backend, or None for the uncalibrated roofline.
+    With a fit, every candidate — any method, folded or not — scores in
+    the same fitted microsecond scale, which is what makes a small
+    ``max_measure`` in the autotuner trustworthy; without one the
+    datasheet roofline still orders geometries sanely but has the
+    recorded sb/db and fold/grid misranks (see ``BENCH_mm2im.json`` and
+    docs/AUTOTUNER.md §Calibration).
+    """
+    # Lazy import: model_fit imports this module for default-geometry
+    # reconstruction, so the dependency must not be circular at import time.
+    from repro.core import model_fit
+    from repro.core.perf_model import estimate_for_plan
+    from repro.kernels.registry import Plan
+
+    if plans is None:
+        plans = candidate_plans(p, batch=batch, bits=bits, hw=hw)
+    if fit == "auto":
+        fit = model_fit.shipped_fit()
+
+    def score(tp: TilePlan) -> float:
+        pl = Plan(tp.block_oh, tp.block_oc, tp.grid_order, tp.method,
+                  tp.fold_batch)
+        if fit is not None:
+            return fit.predict_us(p, pl, batch=batch, bits=bits, hw=hw)
+        return estimate_for_plan(p, batch, plan=pl, bits=bits,
+                                 hw=hw).t_overlapped
+
+    return sorted(plans, key=score)
+
+
 def slab_table(p: TConvProblem, block_oh: int) -> list[tuple[int, int]]:
     """Per-row-block (start, end) input slab ranges — Alg. 1's i_end_row."""
     return [rows_slab(p, oh0, block_oh) for oh0 in range(0, p.oh, block_oh)]

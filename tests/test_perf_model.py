@@ -126,6 +126,63 @@ def test_fold_batch_raises_mxu_utilization():
     assert fdb.t_compute < gdb.t_compute
 
 
+def test_modeled_speedup_threads_the_winning_plan():
+    """Regression: modeled_speedup hardcoded heuristic single-buffered
+    mm2im vs the baseline, silently ignoring the plan that actually won —
+    fold_batch / method / explicit blocks must thread through both sides
+    of the ratio."""
+    from repro.kernels.registry import Plan
+
+    dcgan1 = TConvProblem(4, 4, 1024, 5, 512, 2)
+    base = perf_model.modeled_speedup(dcgan1, 8, bits=8)
+    folded = Plan(8, 512, "bcj", "mm2im", fold_batch=True)
+    threaded = perf_model.modeled_speedup(dcgan1, 8, bits=8, plan=folded)
+    # Folding cuts issued tiles on this shape (test above), so the modeled
+    # speedup over the unfused baseline must grow when the plan is folded.
+    assert threaded > base
+    # The ratio is exactly baseline / plan-threaded estimate.
+    t_b = perf_model.iom_unfused_estimate(dcgan1, 8, bits=8).t_overlapped
+    t_m = perf_model.mm2im_estimate(
+        dcgan1, 8, bits=8, block_oh=8, block_oc=512, grid_order="bcj",
+        fold_batch=True).t_overlapped
+    assert threaded == pytest.approx(t_b / t_m)
+    # method= on the plan selects the double-buffered estimator.
+    db = Plan(4, 512, "bcj", "mm2im_db")
+    t_db = perf_model.mm2im_db_estimate(
+        dcgan1, 8, bits=8, block_oh=4, block_oc=512,
+        grid_order="bcj").t_overlapped
+    assert perf_model.modeled_speedup(dcgan1, 8, bits=8, plan=db) \
+        == pytest.approx(t_b / t_db)
+    # baseline_plan threads the other side of the ratio too.
+    self_vs_self = perf_model.modeled_speedup(
+        dcgan1, 8, bits=8, baseline="mm2im", plan=folded,
+        baseline_plan=folded)
+    assert self_vs_self == pytest.approx(1.0)
+
+
+def test_estimate_for_plan_populates_fit_terms():
+    """The raw cost terms core/model_fit regresses against must be
+    populated and geometry-sensitive for every estimator."""
+    from repro.kernels.registry import Plan
+
+    p = PROBLEMS[0]
+    e = perf_model.estimate_for_plan(p, 4, plan=Plan(8, 32, "bcj", "mm2im"))
+    assert e.n_launches > 0 and e.issued_tiles > 0
+    assert e.issued_macs == e.issued_tiles * perf_model.V5E.mxu_dim ** 3
+    folded = perf_model.estimate_for_plan(
+        p, 4, plan=Plan(8, 32, "bcj", "mm2im", fold_batch=True))
+    assert folded.n_launches == e.n_launches // 4
+    assert folded.fill_bytes >= e.fill_bytes
+    # Baseline estimators fill the terms too (the fit's '*' regime).
+    for m in ("iom_unfused", "zero_insertion", "tdc"):
+        b = perf_model.estimate_for_plan(p, 2, method=m)
+        assert b.n_launches > 0
+    # Unknown methods degrade to the single-buffered estimate.
+    unk = perf_model.estimate_for_plan(p, 1, method="exotic")
+    assert unk.t_overlapped == pytest.approx(
+        perf_model.mm2im_estimate(p, 1, bits=8).t_overlapped)
+
+
 def test_mxu_tiles_quantization():
     mxu = perf_model.V5E.mxu_dim
     assert perf_model.mxu_tiles(1, 1, 1, mxu) == 1

@@ -33,6 +33,11 @@ Typical workflows::
     python tools/tune_sweep.py --export src/repro/data/plans/cpu.json
     python tools/tune_sweep.py --validate-tables
 
+    # Fit calibrated cost coefficients from the persisted measurements
+    # (zero re-measurements — replays cache/table/bench numbers only):
+    python tools/tune_sweep.py --fit src/repro/data/plans/cpu.fit.json \
+        --fit-bench BENCH_mm2im.json
+
 Run with ``PYTHONPATH=src`` from the repo root (see docs/EXPERIMENTS.md
 §Autotune; table format in docs/AUTOTUNER.md).
 """
@@ -221,7 +226,9 @@ def run_export(args) -> int:
 
 
 def run_validate(args) -> int:
-    """Schema-validate every committed table (CI gate)."""
+    """Schema-validate every committed table + calibration (CI gate)."""
+    from repro.core import model_fit
+
     d = Path(args.table_dir) if args.table_dir else plan_table.table_dir()
     files = sorted(d.glob("*.json")) if d.is_dir() else []
     if not files:
@@ -229,6 +236,19 @@ def run_validate(args) -> int:
         return 0
     bad = 0
     for f in files:
+        if f.name.endswith(".fit.json"):
+            # Calibration records share the directory but not the table
+            # schema — validate them as fits.
+            try:
+                fit = model_fit.load_fit(f, strict=True)
+            except ValueError as e:
+                print(f"-- FAIL {f}: {e}")
+                bad += 1
+                continue
+            print(f"-- ok {f}: fit backend={fit.backend} "
+                  f"regimes={len(fit.regimes)} "
+                  f"n_samples={fit.provenance.get('n_samples')}")
+            continue
         try:
             t = plan_table.load_table(f.stem, directory=d, strict=True)
         except ValueError as e:
@@ -238,6 +258,69 @@ def run_validate(args) -> int:
         print(f"-- ok {f}: backend={t.provenance['backend']} "
               f"jax={t.provenance['jax']} entries={len(t)}")
     return 1 if bad else 0
+
+
+def run_fit(args) -> int:
+    """Fit calibrated cost coefficients from persisted measurements.
+
+    Replays the microseconds already recorded in the tuned cache, any
+    shipped table, and (optionally) distilled ``BENCH_mm2im.json`` docs
+    through ``core/model_fit.fit_coefficients`` — **zero measurements**:
+    this never runs a kernel, so it is safe (and instant) on a resumed
+    cache, and CI asserts exactly that.  Prints the per-regime
+    coefficients and the rank-agreement score over any bench head-to-heads
+    so a regression is visible at fit time, then writes the
+    ``<backend>.fit.json`` consumed by ``core/autotune.py``.
+    """
+    from repro.core import model_fit
+
+    backend = args.backend or jax.default_backend()
+    samples, sources, pairs = [], [], []
+    cache_path = Path(args.cache).expanduser() if args.cache \
+        else default_cache_path()
+    for store in [cache_path, plan_table.table_dir() / f"{backend}.json"]:
+        if Path(store).exists():
+            got = model_fit.samples_from_store(store, backend=backend)
+            # The shipped table is usually a promoted copy of the cache;
+            # dedup identical (key, us) samples so one measurement does
+            # not vote twice.
+            fresh = [s for s in got if s not in set(samples)]
+            if fresh:
+                samples.extend(fresh)
+                sources.append(f"{store} ({len(fresh)} samples)")
+                print(f"-- {store}: {len(fresh)} samples")
+    for bench in args.fit_bench or []:
+        try:
+            doc = json.loads(Path(bench).read_text())
+        except (OSError, ValueError) as e:
+            print(f"-- warning: skipping bench doc {bench}: {e}")
+            continue
+        got = model_fit.samples_from_bench(doc)
+        pairs.extend(model_fit.pairs_from_bench(doc))
+        samples.extend(got)
+        sources.append(f"{bench} ({len(got)} samples)")
+        print(f"-- {bench}: {len(got)} samples")
+    if not samples:
+        print("-- FAIL: no measured samples found (empty cache and no "
+              "bench docs?)")
+        return 2
+    fit = model_fit.fit_coefficients(samples, backend=backend,
+                                     sources=sources, note=args.note)
+    for key, c in sorted(fit.regimes.items()):
+        print(f"-- regime {key:14s} n={c.n_samples:3d} "
+              f"us/tile={c.us_per_tile:.4g} us/launch={c.us_per_launch:.4g} "
+              f"eff_bw={c.effective_hbm_gbps:.3g}GB/s "
+              f"logerr={c.mean_abs_log_err:.3f}")
+    if pairs:
+        score = model_fit.rank_agreement(pairs, fit)
+        print(f"-- rank agreement over {score['n_pairs']} recorded "
+              f"head-to-heads: {score['n_agree']}/{score['n_pairs']} "
+              f"(decisive {score['decisive_agree']}/{score['n_decisive']}, "
+              f"misranks={score['n_misranks']}, "
+              f"mean_abs_log2_err={score['mean_abs_log2_err']})")
+    out = model_fit.save_fit(fit, args.fit)
+    print(f"-- fitted {len(samples)} samples (0 measured) -> {out}")
+    return 0
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -260,8 +343,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="stop (resumably) after this wall-time budget")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repeats per candidate")
-    ap.add_argument("--max-measure", type=int, default=6,
-                    help="survivors timed per problem")
+    ap.add_argument("--max-measure", type=int, default=None,
+                    help="survivors timed per problem (default: 4 when a "
+                         "shipped calibration exists for this backend, "
+                         "else 6)")
     ap.add_argument("--list", action="store_true",
                     help="print the work-item keys and exit (no tuning)")
     ap.add_argument("--expect-measured", type=int, default=None,
@@ -275,6 +360,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default: jax.default_backend())")
     ap.add_argument("--note", default="tools/tune_sweep.py export",
                     help="provenance note for --export")
+    ap.add_argument("--fit", metavar="FIT_JSON", default=None,
+                    help="no tuning: fit calibrated cost coefficients from "
+                         "the cache/table/bench measurements already on "
+                         "disk (zero re-measurements) and write them here "
+                         "(e.g. src/repro/data/plans/cpu.fit.json)")
+    ap.add_argument("--fit-bench", metavar="BENCH_JSON", action="append",
+                    default=None,
+                    help="distilled benchmark doc(s) whose head-to-head "
+                         "rows join the --fit samples (repeatable)")
     ap.add_argument("--validate-tables", action="store_true",
                     help="no tuning: schema-validate committed plan tables")
     ap.add_argument("--table-dir", default=None,
@@ -287,6 +381,8 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     if args.validate_tables:
         return run_validate(args)
+    if args.fit:
+        return run_fit(args)
     if args.export:
         return run_export(args)
     return run_sweep(args)
