@@ -37,8 +37,8 @@ from repro.core.maps import TConvProblem
 # the dispatcher fallback — interpret-mode wall time is meaningless for
 # the Pallas kernels off-TPU, so the jitted XLA baselines are timed and
 # the kernels' correctness vs the native requant path is asserted instead.
-INT8_METHODS = ("mm2im", "mm2im_db", "iom_unfused", "zero_insertion", "tdc",
-                "lax")
+INT8_METHODS = ("mm2im", "mm2im_db", "mm2im_ks", "iom_unfused",
+                "zero_insertion", "tdc", "lax")
 
 
 def measured_int8() -> None:
@@ -61,7 +61,7 @@ def measured_int8() -> None:
         assert outs[m].dtype == np.int8, (m, outs[m].dtype)
         dev = int(np.abs(outs[m].astype(np.int32)
                          - outs["mm2im"].astype(np.int32)).max())
-        if m in ("mm2im", "mm2im_db"):
+        if m in ("mm2im", "mm2im_db", "mm2im_ks"):
             emit(f"tableIII_int8_{m}", None,
                  f"native_requant=1;max_dev_vs_mm2im={dev}")
         else:

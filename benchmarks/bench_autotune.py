@@ -45,7 +45,8 @@ from repro.configs.paper_models import (TABLE_II, is_small_problem,
 from repro.core.autotune import (PlanCache, autotune_result, autotune_sweep,
                                  measure_plan)
 from repro.core.maps import TConvProblem
-from repro.core.perf_model import mm2im_db_estimate, mm2im_estimate
+from repro.core.perf_model import (mm2im_db_estimate, mm2im_estimate,
+                                   mm2im_ks_estimate)
 from repro.kernels import ref
 from repro.kernels.ops import tconv
 from repro.kernels.registry import Plan
@@ -80,8 +81,9 @@ def fold_head_to_head() -> None:
     geoms = {
         "mm2im": dict(block_oh=8, block_oc=128, grid_order="bcj"),
         "mm2im_db": dict(block_oh=4, block_oc=128, grid_order="bcj"),
+        "mm2im_ks": dict(block_oh=8, block_oc=128, grid_order="bcj"),
     }
-    for method in ("mm2im", "mm2im_db"):
+    for method in ("mm2im", "mm2im_db", "mm2im_ks"):
         geom = geoms[method]
         # Alternating min-of-rounds: interpret-mode wall time on a shared
         # CPU drifts with background load, so interleave the two variants
@@ -94,7 +96,8 @@ def fold_head_to_head() -> None:
             fold_us = min(fold_us, measure_plan(
                 p, Plan(method=method, fold_batch=True, **geom),
                 batch=batch, repeats=3))
-        est = (mm2im_db_estimate if method == "mm2im_db" else mm2im_estimate)
+        est = {"mm2im_db": mm2im_db_estimate,
+               "mm2im_ks": mm2im_ks_estimate}.get(method, mm2im_estimate)
         pred_grid = est(p, batch, bits=32, **geom).t_overlapped
         pred_fold = est(p, batch, bits=32, fold_batch=True,
                         **geom).t_overlapped

@@ -66,8 +66,8 @@ def measured_cpu() -> None:
     p, _ = gan.init_dcgan_g(key, scale_down=8)
     z = jax.random.normal(jax.random.PRNGKey(1), (2, 100))
     outs = {}
-    for m in ("mm2im", "mm2im_db", "iom_unfused", "zero_insertion", "tdc",
-              "lax"):
+    for m in ("mm2im", "mm2im_db", "mm2im_ks", "iom_unfused",
+              "zero_insertion", "tdc", "lax"):
         fn = jax.jit(lambda zz, m=m: gan.dcgan_generator(p, zz, method=m))
         outs[m] = np.asarray(fn(z))
         if m == "mm2im_db":

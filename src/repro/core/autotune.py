@@ -63,6 +63,7 @@ import json
 import math
 import os
 import time
+import warnings
 from pathlib import Path
 from typing import Iterable, Optional, Sequence, Tuple, Union
 
@@ -73,7 +74,8 @@ import numpy as np
 from repro.core import model_fit, tiling
 from repro.core.epilogue import Epilogue
 from repro.core.maps import TConvProblem
-from repro.core.perf_model import HW, V5E, mm2im_db_estimate, mm2im_estimate
+from repro.core.perf_model import (HW, V5E, mm2im_db_estimate,
+                                   mm2im_estimate, mm2im_ks_estimate)
 from repro.kernels import ops as kernel_ops
 from repro.kernels.registry import Plan
 
@@ -98,6 +100,7 @@ _CACHE_VERSION = 1
 METHOD_ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
+    "mm2im_ks": mm2im_ks_estimate,
 }
 
 
@@ -486,21 +489,44 @@ def lookup_plan(p: TConvProblem, *, dtype=jnp.float32, batch: int = 1,
     table (:data:`TIER_SHIPPED`, ``core/plan_table.py``); a miss in both
     returns None and the caller falls back to the ``plan_blocks``
     heuristic.  A pure read either way.
+
+    Forward compatibility: an entry whose ``Plan.method`` names a kernel
+    that is *not* in this checkout's registry (e.g. a table exported by a
+    newer release with an extra family) is skipped with a warning and the
+    lookup falls through to the next tier — a stale plan must degrade to
+    the heuristic, never fail dispatch.
     """
     if not isinstance(cache, PlanCache):
         cache = shared_cache(cache)
     key = cache_key(p, dtype=dtype, hw=hw, batch=batch)
     plan = cache.get(key)
     if plan is not None:
-        return plan, TIER_USER_CACHE
+        if _method_registered(plan):
+            return plan, TIER_USER_CACHE
+        warnings.warn(
+            f"autotune cache entry {key!r} selects unregistered kernel "
+            f"method {plan.method!r}; ignoring it (re-tune or upgrade to "
+            f"a build that provides the method)", stacklevel=2)
     from repro.core.plan_table import shipped_table
 
     table = shipped_table()
     if table is not None:
         plan = table.get(key)
         if plan is not None:
-            return plan, TIER_SHIPPED
+            if _method_registered(plan):
+                return plan, TIER_SHIPPED
+            warnings.warn(
+                f"shipped plan table entry {key!r} selects unregistered "
+                f"kernel method {plan.method!r}; ignoring it (table "
+                f"exported by a newer build?)", stacklevel=2)
     return None
+
+
+def _method_registered(plan: Plan) -> bool:
+    """True when the plan's kernel variant exists in this checkout."""
+    from repro.kernels import registry as kernel_registry
+
+    return not plan.method or plan.method in kernel_registry.names()
 
 
 def cached_plan(p: TConvProblem, *, dtype=jnp.float32, batch: int = 1,

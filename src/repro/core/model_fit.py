@@ -246,7 +246,7 @@ def pairs_from_bench(doc: dict) -> List[RankPair]:
             pairs.append(RankPair(name, p, 1, 32, pa, pb,
                                   float(d["sb_us"]), float(d["db_us"])))
             continue
-        m = re.fullmatch(r"autotune_fold_dcgan1_(mm2im(?:_db)?)", name)
+        m = re.fullmatch(r"autotune_fold_dcgan1_(mm2im(?:_db|_ks)?)", name)
         if m and "grid_us" in d and "fold_us" in d:
             method = m.group(1)
             p = _FOLD_BENCH_PROBLEM

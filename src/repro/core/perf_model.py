@@ -259,6 +259,59 @@ def mm2im_db_estimate(p: TConvProblem, batch: int = 1, **kw) -> Estimate:
     return mm2im_estimate(p, batch, double_buffered=True, **kw)
 
 
+def mm2im_ks_estimate(
+    p: TConvProblem,
+    batch: int = 1,
+    *,
+    block_oh: Optional[int] = None,
+    block_oc: Optional[int] = None,
+    bits: int = 8,
+    grid_order: str = "auto",
+    hw: HW = V5E,
+    fold_batch: bool = False,
+    requant: Optional[bool] = None,
+) -> Estimate:
+    """Kernel-segregated MM2IM (``kernels/mm2im_ks_pallas``).
+
+    Host staging, grid structure and HBM traffic are identical to the
+    single-buffered MM2IM (the weight relayout is a permutation — same
+    bytes), so every memory-side term is inherited.  Only the compute
+    term differs: instead of one ``(n_slab·Iw, Ks²·boc)`` MatMul per grid
+    cell, each non-empty sub-kernel issues a dense
+    ``((bi + Jh - 1)·Iw, Jh·Jw·boc)`` product over exactly the slab rows
+    its taps touch — the tile count sums only **effectual** MXU work
+    (empty residue classes of a gapped stride > kernel TCONV issue
+    nothing).  At stride 1 the sum degenerates to MM2IM's single-MatMul
+    tile count, and ``fold_batch`` scales each sub-MatMul's M by B just
+    like the plan-v2 folded family.
+    """
+    from repro.core.segregate import segregate  # avoid cycle
+    from repro.kernels.mm2im_pallas import plan_blocks
+
+    base = mm2im_estimate(
+        p, batch, block_oh=block_oh, block_oc=block_oc, bits=bits,
+        grid_order=grid_order, hw=hw, fold_batch=fold_batch, requant=requant)
+    if block_oh is None or block_oc is None:
+        block_oh, block_oc = plan_blocks(
+            p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
+            in_bytes=bits // 8, vmem_budget=int(hw.vmem_bytes * 0.75))
+    bi = block_oh // p.stride
+    seg = segregate(p.ks, p.stride, p.padding)
+    m_unit = batch if fold_batch else 1
+    tiles = sum(
+        mxu_tiles(m_unit * (bi + sk.jh - 1) * p.iw, sk.taps * block_oc,
+                  p.ic, hw.mxu_dim)
+        for sk in seg.subkernels if sk.taps)
+    issued = base.n_launches * tiles * hw.mxu_dim**3
+    return dataclasses.replace(
+        base,
+        method="mm2im_ks",
+        t_compute=2 * issued / _dtype_peak(hw, bits),
+        issued_macs=issued,
+        issued_tiles=base.n_launches * tiles,
+    )
+
+
 def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
                          hw: HW = V5E) -> Estimate:
     """Unfused IOM: dense MatMul -> HBM intermediate -> col2im scatter pass.
@@ -332,6 +385,7 @@ def tdc_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
 ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
+    "mm2im_ks": mm2im_ks_estimate,
     "iom_unfused": iom_unfused_estimate,
     "zero_insertion": zero_insertion_estimate,
     "tdc": tdc_estimate,
@@ -340,7 +394,7 @@ ESTIMATORS = {
 
 #: Methods whose estimators accept the full plan-geometry kwargs
 #: (``block_oh``/``block_oc``/``grid_order``/``fold_batch``).
-PLAN_AWARE_METHODS = frozenset({"mm2im", "mm2im_db"})
+PLAN_AWARE_METHODS = frozenset({"mm2im", "mm2im_db", "mm2im_ks"})
 
 
 def estimate_for_plan(p: TConvProblem, batch: int = 1, *, plan=None,

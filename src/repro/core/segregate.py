@@ -1,0 +1,229 @@
+"""Kernel segregation (Tida et al.) — S² stride-1 sub-kernels + interleave maps.
+
+MM2IM (DESIGN.md §2) fixes the overlapping-sums problem of the IOM
+formulation but still issues the full ``Ks²`` tap range per MatMul row and
+resolves the stride-``S`` output interleave with residue-decomposed
+scatter-adds.  *Kernel segregation* ("Kernel-Segregated Transpose
+Convolution Operation" and its "Unified" follow-up, PAPERS.md) restructures
+the same arithmetic so neither is needed:
+
+Every partial product of the TCONV contract (``kernels/ref.py``) lands at
+
+    out[o_h, o_w] += x[ih, iw] * w[kh, kw]   where  o_h + ct = S*ih + kh
+
+so for a fixed *output-row residue* ``a' = o_h % S`` only kernel rows with
+``kh ≡ a' + ct (mod S)`` can ever contribute — and symmetrically for
+columns.  Grouping the ``Ks²`` taps by output residue ``(a', b')``
+therefore splits the kernel into ``S²`` disjoint **sub-kernels**, each a
+plain *stride-1* convolution over the unexpanded input:
+
+    plane[q, p] = sum_{jh, jw} x[q + mh - jh, p + mw - jw] * w[kh(jh), kw(jw)]
+
+with ``kh(jh) = ah + S*jh`` (``ah = (a' + ct) % S``), row shift
+``mh = (a' + ct) // S`` and tap count ``Jh = ceil((Ks - ah)/S)``.  The
+plane *is* the final output restricted to its residue class —
+``out[a'::S, b'::S] = plane`` — an interleaved strided **view write** with
+no accumulation between sub-kernels and no col2im scatter.  Every MAC of
+every sub-problem contributes to exactly one final output (no inserted
+zeros, no cropped-tap waste beyond the image boundary), which is the
+paper's "ineffectual MAC" elimination.  At ``S == 1`` there is exactly one
+sub-kernel (the whole kernel) and the dataflow degenerates to plain MM2IM.
+
+This module is the pure host-side decomposition: tap groups, packed weight
+layout (a permutation of MM2IM's ``(Ic, Ks², Oc)`` relayout, grouped so
+each sub-kernel's taps are one contiguous slice), interleave maps for
+tests/analytics, and a reference implementation.  The Pallas kernel that
+executes it is ``kernels/mm2im_ks_pallas.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.kernels.ref import crop_offsets, out_size
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubKernel:
+    """One stride-1 sub-problem: the taps feeding output residue (a', b').
+
+    ``plane[q, p] = sum_{jh, jw} x[q + row_shift - jh, p + col_shift - jw]
+    * w[kh_taps[jh], kw_taps[jw]]`` and the plane interleaves into the
+    output as ``out[row_phase::S, col_phase::S]``.  ``offset`` is the
+    first tap's position in the packed ``(Ic, Ks², Oc)`` weight layout
+    (:func:`pack_weights`); the sub-kernel owns the contiguous tap range
+    ``[offset, offset + taps)``.
+    """
+
+    stride: int
+    row_phase: int          # a' — output-row residue this sub-kernel fills
+    col_phase: int          # b' — output-column residue
+    kh_taps: Tuple[int, ...]  # kernel rows, ascending: (a'+ct)%S + S*jh
+    kw_taps: Tuple[int, ...]
+    row_shift: int          # mh = (a' + ct) // S
+    col_shift: int          # mw = (b' + cl) // S
+    offset: int             # tap offset into the packed weight layout
+
+    @property
+    def jh(self) -> int:
+        return len(self.kh_taps)
+
+    @property
+    def jw(self) -> int:
+        return len(self.kw_taps)
+
+    @property
+    def taps(self) -> int:
+        """Effectual taps of this sub-problem (0 for stride > kernel gaps)."""
+        return self.jh * self.jw
+
+    def plane_shape(self, oh: int, ow: int) -> Tuple[int, int]:
+        """(rows, cols) of the interleaved output view this plane fills."""
+        return (len(range(self.row_phase, oh, self.stride)),
+                len(range(self.col_phase, ow, self.stride)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Segregation:
+    """Full S² decomposition of a ``(Ks, stride, padding)`` TCONV kernel."""
+
+    ks: int
+    stride: int
+    ct: int                       # SAME crop offsets (0 for VALID)
+    cl: int
+    subkernels: Tuple[SubKernel, ...]  # ordered (row_phase, col_phase)
+
+    @property
+    def total_taps(self) -> int:
+        """Packed tap count — always Ks² (taps partition the kernel)."""
+        return sum(sk.taps for sk in self.subkernels)
+
+    def permutation(self) -> np.ndarray:
+        """Flat tap order of :func:`pack_weights`: packed index -> kh*Ks+kw.
+
+        The packed layout is MM2IM's ``(Ic, Ks², Oc)`` relayout with the
+        tap axis permuted so each sub-kernel's ``Jh*Jw`` taps form one
+        contiguous slice at ``sk.offset`` — one static weight-slice per
+        dense sub-MatMul in the Pallas kernel.
+        """
+        perm = [kh * self.ks + kw
+                for sk in self.subkernels
+                for kh in sk.kh_taps for kw in sk.kw_taps]
+        assert len(perm) == self.ks * self.ks, (len(perm), self.ks)
+        return np.asarray(perm, np.int32)
+
+
+def segregate(ks: int, stride: int, padding: str = "SAME") -> Segregation:
+    """Decompose a ``Ks x Ks`` stride-``S`` kernel into S² sub-kernels.
+
+    Sub-kernels are emitted in ``(row_phase, col_phase)`` row-major order;
+    a residue class beyond the kernel (``stride > Ks``, VALID) gets an
+    empty tap tuple — its output rows/columns are the genuine zero gaps of
+    the gapped TCONV output.
+    """
+    s = stride
+    ct, cl = crop_offsets(ks, s, padding)
+
+    def taps(phase: int, crop: int) -> Tuple[int, ...]:
+        base = (phase + crop) % s
+        return tuple(range(base, ks, s))
+
+    subs = []
+    off = 0
+    for a in range(s):
+        kh = taps(a, ct)
+        for b in range(s):
+            kw = taps(b, cl)
+            sk = SubKernel(stride=s, row_phase=a, col_phase=b,
+                           kh_taps=kh, kw_taps=kw,
+                           row_shift=(a + ct) // s, col_shift=(b + cl) // s,
+                           offset=off)
+            subs.append(sk)
+            off += sk.taps
+    seg = Segregation(ks=ks, stride=s, ct=ct, cl=cl, subkernels=tuple(subs))
+    assert seg.total_taps == ks * ks
+    return seg
+
+
+def pack_weights(w, seg: Optional[Segregation] = None, *,
+                 stride: Optional[int] = None, padding: str = "SAME"):
+    """Relayout HWOI filters ``(Ks, Ks, Oc, Ic)`` -> packed ``(Ic, Ks², Oc)``.
+
+    Same target layout as MM2IM's ``prepare_mm2im`` relayout, but with the
+    tap axis grouped by sub-kernel (see :meth:`Segregation.permutation`).
+    Works on numpy or jax arrays (pure transpose/reshape/take).
+    """
+    import jax.numpy as jnp
+
+    if seg is None:
+        seg = segregate(w.shape[0], stride, padding)
+    ks, _, oc, ic = w.shape
+    w3 = jnp.transpose(jnp.asarray(w), (3, 0, 1, 2)).reshape(ic, ks * ks, oc)
+    return jnp.take(w3, jnp.asarray(seg.permutation()), axis=1)
+
+
+def interleave_maps(seg: Segregation, oh: int, ow: int) -> dict:
+    """(row_phase, col_phase) -> (rows, cols) output index arrays.
+
+    The strided views each sub-kernel's plane is written to — the
+    analytics/test counterpart of the kernel's interleaved writes.  Every
+    output pixel appears in exactly one map (the views tile the output).
+    """
+    out = {}
+    for sk in seg.subkernels:
+        out[(sk.row_phase, sk.col_phase)] = (
+            np.arange(sk.row_phase, oh, seg.stride, dtype=np.int32),
+            np.arange(sk.col_phase, ow, seg.stride, dtype=np.int32))
+    return out
+
+
+def segregated_tconv_reference(x, w, *, stride: int, padding: str = "SAME"):
+    """Reference TCONV via explicit segregation: S² stride-1 sub-convs +
+    interleaved view writes.  Oracle for the Pallas kernel and the golden
+    worked-example test; mirrors ``ref.iom_reference`` in role.
+
+    x: (B, Ih, Iw, Ic); w: (Ks, Ks, Oc, Ic) HWOI.  Integer inputs
+    accumulate in int32 (exact), floats in f32.
+    """
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    b, ih, iw, ic = x.shape
+    ks, _, oc, _ = w.shape
+    s = stride
+    seg = segregate(ks, s, padding)
+    oh = out_size(ih, ks, s, padding)
+    ow = out_size(iw, ks, s, padding)
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    xw = x.astype(acc_dtype)
+    out = jnp.zeros((b, oh, ow, oc), acc_dtype)
+    for sk in seg.subkernels:
+        qh, qw = sk.plane_shape(oh, ow)
+        if qh == 0 or qw == 0:
+            continue
+        plane = jnp.zeros((b, qh, qw, oc), acc_dtype)
+        for jh, kh in enumerate(sk.kh_taps):
+            for jw, kw in enumerate(sk.kw_taps):
+                # Plane cell (q, p) reads x[q + mh - jh, p + mw - jw];
+                # clamp to the input extent (outside = zero contribution).
+                r_ofs = sk.row_shift - jh
+                c_ofs = sk.col_shift - jw
+                q0, q1 = max(0, -r_ofs), min(qh, ih - r_ofs)
+                p0, p1 = max(0, -c_ofs), min(qw, iw - c_ofs)
+                if q1 <= q0 or p1 <= p0:
+                    continue
+                patch = xw[:, q0 + r_ofs:q1 + r_ofs, p0 + c_ofs:p1 + c_ofs, :]
+                tap = w[kh, kw].astype(acc_dtype)  # (Oc, Ic)
+                plane = plane.at[:, q0:q1, p0:p1, :].add(
+                    jnp.einsum("bhwi,oi->bhwo", patch, tap))
+        out = out.at[:, sk.row_phase::s, sk.col_phase::s, :].set(plane)
+    return out

@@ -34,7 +34,7 @@ class TilePlan:
     grid_order: str
     vmem_bytes: int
     halo_overhead: float  # recomputed-slab fraction vs ideal (dense-MXU cost)
-    method: str = "mm2im"  # kernel variant: 'mm2im' | 'mm2im_db'
+    method: str = "mm2im"  # kernel variant: 'mm2im' | 'mm2im_db' | 'mm2im_ks'
     fold_batch: bool = False  # plan v2: batch folded into the MatMul M-dim
 
     def describe(self) -> str:
@@ -71,6 +71,12 @@ def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
     is what lets the double-buffered variant run blocks the single-buffered
     kernel cannot fit.
 
+    ``'mm2im_ks'`` shares the whole-input residency but replaces the
+    single ``(n_slab·Iw, Ks²·boc)`` product with the per-sub-kernel dense
+    products of the segregated dataflow (each over only the slab rows its
+    taps touch) plus the residue planes — strictly smaller MatMul scratch
+    whenever the stride drops taps.
+
     ``fold_batch=True`` multiplies the batch-concatenated residencies by
     ``batch``: the folded single-buffered kernel holds the whole
     ``(B, Ihp, Iw, Ic)`` input block, the folded pipeline two
@@ -79,15 +85,25 @@ def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
     budget that gates ``fold_batch`` candidates in :func:`candidate_plans`.
     """
     ebytes = bits // 8
-    _, n_slab, _, ihp, ow_p = _geometry(p, block_oh)
+    bi, n_slab, _, ihp, ow_p = _geometry(p, block_oh)
     bmul = batch if fold_batch else 1
     if method == "mm2im_db":
         x_resident = 2 * bmul * n_slab * p.iw * p.ic * ebytes  # slab slots
     else:
         x_resident = bmul * ihp * p.iw * p.ic * ebytes         # whole input
+    if method == "mm2im_ks":
+        from repro.core.segregate import segregate  # local: avoid cycle
+
+        seg = segregate(p.ks, p.stride, p.padding)
+        mm_acc = (sum(bmul * (bi + sk.jh - 1) * p.iw * sk.taps
+                      * block_oc * 4
+                      for sk in seg.subkernels if sk.taps)
+                  + bmul * block_oh * ow_p * block_oc * 4)     # planes
+    else:
+        mm_acc = 2 * bmul * n_slab * p.iw * p.ks**2 * block_oc * 4  # mm+acc
     return (x_resident
             + p.ic * p.ks**2 * block_oc * ebytes               # weight block
-            + 2 * bmul * n_slab * p.iw * p.ks**2 * block_oc * 4  # mm + acc
+            + mm_acc
             + 2 * bmul * block_oh * ow_p * block_oc * 4)       # out blocks
 
 

@@ -81,6 +81,11 @@ def tdc_tconv(x, w, *, stride: int, padding: str = "SAME"):
         for b in range(min(s, ow)):
             rw, gw = (b + cl) % s, (b + cl) // s
             ntw = (ks - 1 - rw) // s + 1
+            if nth == 0 or ntw == 0:
+                # Gapped residue (stride > kernel): no tap of w lands on
+                # this (a, b) class — the sub-output is identically zero.
+                row.append(jnp.zeros((bsz, n_qh, n_qw, oc), jnp.float32))
+                continue
             # Sub-filter, flipped in t/u to express the sum as a conv.
             sub = w[rh::s, rw::s][::-1, ::-1]  # (nth, ntw, oc, ic)
             sub = jnp.transpose(sub, (0, 1, 3, 2))  # HWIO

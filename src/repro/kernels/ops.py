@@ -14,6 +14,10 @@ unfused-epilogue remainder, for every precision.  The built-in methods:
   * ``'mm2im_db'``      — double-buffered pipeline variant: per-row-block
                           slab DMA overlapped with MatMul+col2im
                           (``mm2im_db_pallas``); bit-identical to 'mm2im'.
+  * ``'mm2im_ks'``      — kernel-segregated family: S² stride-1 dense
+                          sub-MatMuls written to interleaved output views,
+                          no col2im scatter, no ineffectual MACs
+                          (``mm2im_ks_pallas``; core/segregate.py).
   * ``'iom_unfused'``   — paper Eq. (2) unfused: MatMul -> HBM -> col2im
                           scatter (the XLA-level baseline).
   * ``'zero_insertion'``— §II-A method (i) baseline.
@@ -75,6 +79,7 @@ from repro.core import epilogue as epi
 from repro.core.epilogue import Epilogue
 from repro.kernels import baselines, ref, registry
 from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
+from repro.kernels.mm2im_ks_pallas import mm2im_ks_tconv
 from repro.kernels.mm2im_pallas import mm2im_tconv
 from repro.kernels.registry import Plan, PlanLike
 
@@ -132,6 +137,7 @@ def _make_mm2im_diff(kernel_fn):
 
 _mm2im_diff = _make_mm2im_diff(mm2im_tconv)
 _mm2im_db_diff = _make_mm2im_diff(mm2im_db_tconv)
+_mm2im_ks_diff = _make_mm2im_diff(mm2im_ks_tconv)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +184,13 @@ registry.register(
     description="double-buffered MM2IM: slab DMA pipelined against compute")(
         _make_mm2im_impl(_mm2im_db_diff, mm2im_db_tconv))
 
+registry.register(
+    "mm2im_ks", fuses=("bias", "requant", "activation"), supports_plan=True,
+    supports_int8=True,
+    description="kernel-segregated MM2IM: S^2 stride-1 dense sub-MatMuls, "
+                "interleaved output views, zero ineffectual MACs")(
+        _make_mm2im_impl(_mm2im_ks_diff, mm2im_ks_tconv))
+
 
 @registry.register(
     "iom_unfused",
@@ -199,7 +212,14 @@ def _tdc_impl(x, w, *, stride, padding, epilogue, plan):
 
 @registry.register("lax", description="XLA native conv_transpose (gold)")
 def _lax_impl(x, w, *, stride, padding, epilogue, plan):
-    return ref.tconv_lax(x, w, stride=stride, padding=padding)
+    out = ref.tconv_lax(x, w, stride=stride, padding=padding)
+    # XLA pads gapped stride>kernel VALID outputs to S·(I-1)+max(Ks, S);
+    # the repo contract (ref.out_size, DESIGN.md §4) is S·(I-1)+Ks.  The
+    # extra rows/cols are pure zero gaps — crop them so 'lax' serves as
+    # the gold for every geometry the other methods support.
+    oh = ref.out_size(x.shape[1], w.shape[0], stride, padding)
+    ow = ref.out_size(x.shape[2], w.shape[0], stride, padding)
+    return out[:, :oh, :ow]
 
 
 # ---------------------------------------------------------------------------

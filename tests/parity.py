@@ -1,0 +1,205 @@
+"""Cross-method differential parity harness (ISSUE-7 satellite #1).
+
+One reusable check — :func:`assert_method_parity` — verifies any
+registered TCONV method against the ``'lax'`` gold over a *pinned* grid
+of configurations:
+
+    stride ∈ {1, 2, 4} × padding ∈ {SAME, VALID} × kernel ∈ {3, 4, 5}
+    × dtype ∈ {f32, int8+requant} × batch ∈ {1, 8} × fold ∈ {off, on}
+
+This replaces the copy-pasted per-file parity loops that accumulated as
+the kernel-family count grew (``test_epilogue_dispatch`` /
+``test_batch_folding`` / ``test_mm2im_db_kernel``): a new registry entry
+is enrolled automatically — ``tests/test_parity_matrix.py`` parametrizes
+over ``registry.names()`` at collection time, so registering a kernel is
+all it takes to be differential-tested against the gold.
+
+Conventions baked into the grid:
+
+* **Legality is derived, not hand-listed.** SAME with ``Ks < S`` is
+  unsupported repo-wide (``ref.crop_offsets`` raises), so those cells are
+  excluded for every method; ``fold`` cells exist only for
+  ``supports_plan`` methods at ``batch > 1`` (the fold rides a plan).
+* **Epilogue coverage without cell multiplication.** Each cell carries a
+  deterministic (bias?, activation) pair derived from the cell key, so
+  the whole activation table is exercised across the grid instead of
+  multiplying every cell by every activation.
+* **Tolerances per dtype.** f32 compares ``allclose(rtol=atol=1e-4)``
+  against the gold (different summation orders are legal); int8+requant
+  compares **bit-exact** — the operand ranges keep every accumulation
+  inside the exactly-representable integer range, so any deviation is a
+  real bug, not rounding.
+* **Fold cells additionally assert bit-identity** with the same plan run
+  unfolded: ``fold_batch`` is a performance knob and may never change
+  results (the plan-v2 contract).
+
+The gold itself is memoized per (geometry, dtype, batch, epilogue): the
+grid costs one gold evaluation per cell *total*, not per method.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.kernels import ref, registry
+from repro.kernels.ops import tconv, tconv_int8
+from repro.kernels.registry import Plan
+
+STRIDES = (1, 2, 4)
+PADDINGS = ("SAME", "VALID")
+KERNELS = (3, 4, 5)
+DTYPES = ("f32", "int8")
+BATCHES = (1, 8)
+
+#: Activation table cycled across cells (epilogue coverage without
+#: multiplying the grid).
+_ACTS = ("none", "relu", "tanh", "leaky_relu")
+
+# Small rectangular spatial extent: trace cost dominates interpret-mode
+# runtime, so bigger images buy nothing.  ic*ks^2*127^2 stays far below
+# 2^24 — the int8 fallback's f32 accumulation is exact and the int8
+# column can assert bitwise equality.
+IH, IW, IC, OC = 5, 4, 4, 5
+REQUANT_SCALE = 0.004
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityCase:
+    """One cell of the pinned parity grid."""
+
+    stride: int
+    padding: str
+    ks: int
+    dtype: str      # 'f32' | 'int8'
+    batch: int
+    fold: bool
+
+    @property
+    def key(self) -> str:
+        return (f"{self.problem_key}:{'fold' if self.fold else 'grid'}")
+
+    @property
+    def problem_key(self) -> str:
+        """Cell identity *minus* the fold knob: folded and grid runs of a
+        geometry share operands, epilogue and gold (the fold may never
+        change the math)."""
+        return (f"s{self.stride}:{self.padding}:ks{self.ks}:{self.dtype}"
+                f":b{self.batch}")
+
+    @property
+    def bias_and_activation(self) -> Tuple[bool, str]:
+        """Deterministic epilogue for this cell (fold-independent)."""
+        h = zlib.crc32(self.problem_key.encode())
+        return bool(h & 1), _ACTS[(h >> 1) % len(_ACTS)]
+
+
+def _same_legal(ks: int, stride: int, padding: str) -> bool:
+    return padding != "SAME" or ks >= stride
+
+
+def parity_grid(method: Optional[str] = None) -> Iterator[ParityCase]:
+    """Legal cells of the pinned grid, optionally filtered for a method.
+
+    With ``method`` given, fold cells are emitted only when the method's
+    registry spec is plan-capable (the fold is threaded via a plan).
+    """
+    plan_capable = (method is None
+                    or registry.get(method).supports_plan)
+    for s in STRIDES:
+        for pad in PADDINGS:
+            for ks in KERNELS:
+                if not _same_legal(ks, s, pad):
+                    continue
+                for dt in DTYPES:
+                    for b in BATCHES:
+                        folds = (False, True) if (b > 1 and plan_capable) \
+                            else (False,)
+                        for fold in folds:
+                            yield ParityCase(s, pad, ks, dt, b, fold)
+
+
+def _operands(case: ParityCase):
+    """Deterministic operands for one cell (shared across all methods)."""
+    seed = zlib.crc32(case.problem_key.encode())
+    rng = np.random.default_rng(seed)
+    if case.dtype == "int8":
+        x = rng.integers(-128, 128, (case.batch, IH, IW, IC), dtype=np.int8)
+        w = rng.integers(-128, 128, (case.ks, case.ks, OC, IC),
+                         dtype=np.int8)
+        bias = rng.integers(-500, 500, (OC,), dtype=np.int32)
+    else:
+        x = rng.standard_normal((case.batch, IH, IW, IC)).astype(np.float32)
+        w = (rng.standard_normal((case.ks, case.ks, OC, IC)) * 0.1
+             ).astype(np.float32)
+        bias = rng.standard_normal(OC).astype(np.float32)
+    use_bias, act = case.bias_and_activation
+    return x, w, (bias if use_bias else None), act
+
+
+def _run(method: str, case: ParityCase, plan) -> np.ndarray:
+    x, w, bias, act = _operands(case)
+    if case.dtype == "int8":
+        out = tconv_int8(x, w, bias, REQUANT_SCALE, stride=case.stride,
+                         padding=case.padding, method=method,
+                         activation=act, plan=plan)
+    else:
+        out = tconv(x, w, bias, stride=case.stride, padding=case.padding,
+                    method=method, activation=act, plan=plan)
+    return np.asarray(out)
+
+
+_GOLD_CACHE: dict = {}
+
+
+def _gold(case: ParityCase) -> np.ndarray:
+    """'lax' gold for the cell's geometry/epilogue — fold-independent."""
+    key = case.problem_key
+    if key not in _GOLD_CACHE:
+        _GOLD_CACHE[key] = _run("lax", dataclasses.replace(case, fold=False),
+                                plan=None)
+    return _GOLD_CACHE[key]
+
+
+def _cell_plan(case: ParityCase, *, fold: bool) -> Plan:
+    # block_oh = stride => bi = 1 row per block: the smallest legal row
+    # block, so every method exercises real multi-block grids.
+    return Plan(case.stride, min(OC, 4), "bcj", fold_batch=fold)
+
+
+def assert_method_parity(method: str, case: ParityCase) -> None:
+    """Check one method on one cell of the grid against the gold.
+
+    f32 cells compare within 1e-4; int8+requant cells compare bit-exact.
+    Fold cells additionally assert bit-identity with the unfolded run of
+    the same plan.
+    """
+    spec = registry.get(method)
+    plan = _cell_plan(case, fold=case.fold) if spec.supports_plan else None
+    got = _run(method, case, plan)
+    want = _gold(case)
+    assert got.shape == want.shape, \
+        f"{method} {case.key}: shape {got.shape} != gold {want.shape}"
+    if case.dtype == "int8":
+        assert got.dtype == np.int8, (method, case.key, got.dtype)
+        dev = np.abs(got.astype(np.int32) - want.astype(np.int32)).max()
+        assert (got == want).all(), \
+            f"{method} {case.key}: int8 max deviation {dev}"
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{method} {case.key}")
+    if case.fold:
+        grid = _run(method, case, _cell_plan(case, fold=False))
+        assert (got == grid).all(), \
+            f"{method} {case.key}: folded result != grid-batch result"
+
+
+def assert_full_parity(method: str, dtype: Optional[str] = None) -> None:
+    """Run a method over every legal cell of the pinned grid."""
+    for case in parity_grid(method):
+        if dtype is not None and case.dtype != dtype:
+            continue
+        assert_method_parity(method, case)

@@ -1,4 +1,4 @@
-"""Batch folding (plan schema v2): parity matrix, enumeration, dispatch.
+"""Batch folding (plan schema v2): pipelines, enumeration, dispatch.
 
 The fold contract is strict: collapsing ``(batch, slab-rows)`` into the
 MatMul M-dimension must be **bit-identical** to the grid-batch dataflow
@@ -6,6 +6,10 @@ for every (stride, padding, dtype, kernel-variant) cell — col2im runs per
 batch element over views of the folded product with the unfolded
 reduction order, so the fold is purely a performance knob and the
 autotuner/plan tiers may apply it without ever changing results.
+
+The folded-vs-grid-vs-gold parity matrix itself lives in
+``tests/test_parity_matrix.py`` (every registered method, both dtypes);
+this file keeps the fold-specific machinery tests.
 """
 
 import jax
@@ -18,7 +22,7 @@ from repro.core.maps import TConvProblem
 from repro.kernels import ref, registry
 from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
 from repro.kernels.mm2im_pallas import grid_semantics, mm2im_tconv
-from repro.kernels.ops import tconv, tconv_int8
+from repro.kernels.ops import tconv
 from repro.kernels.registry import Plan
 
 RNG = np.random.default_rng(21)
@@ -35,50 +39,8 @@ def _f32_problem(s, b=3, ic=8, oc=5):
 
 
 # ---------------------------------------------------------------------------
-# The parity matrix: folded vs grid-batch vs gold across
-# stride x padding x dtype x kernel variant.
+# Fold-specific kernel machinery (parity matrix: test_parity_matrix.py)
 # ---------------------------------------------------------------------------
-
-
-@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
-@pytest.mark.parametrize("padding", ["SAME", "VALID"])
-@pytest.mark.parametrize("stride", [1, 2, 4])
-def test_fold_parity_f32(stride, padding, method):
-    """f32: folded == grid-batch bitwise, both == lax gold numerically."""
-    x, w = _f32_problem(stride)
-    grid = np.asarray(tconv(x, w, stride=stride, padding=padding,
-                            method=method,
-                            plan=Plan(stride, 4, "bcj")))
-    fold = np.asarray(tconv(x, w, stride=stride, padding=padding,
-                            method=method,
-                            plan=Plan(stride, 4, "bcj", fold_batch=True)))
-    assert (fold == grid).all(), (stride, padding, method)
-    gold = np.asarray(ref.tconv_lax(x, w, stride=stride, padding=padding))
-    np.testing.assert_allclose(fold, gold, rtol=1e-4, atol=1e-4)
-
-
-@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
-@pytest.mark.parametrize("padding", ["SAME", "VALID"])
-@pytest.mark.parametrize("stride", [1, 2, 4])
-def test_fold_parity_int8_requant(stride, padding, method):
-    """int8 + requant epilogue: folded == grid-batch == oracle, bit-exact."""
-    ks, ih, iw = _GEOM[stride]
-    b, ic, oc = 3, 8, 4
-    xq = RNG.integers(-128, 128, (b, ih, iw, ic), dtype=np.int8)
-    wq = RNG.integers(-128, 128, (ks, ks, oc, ic), dtype=np.int8)
-    bq = RNG.integers(-500, 500, (oc,), dtype=np.int32)
-    grid = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=stride,
-                                 padding=padding, method=method,
-                                 plan=Plan(stride, 4, "bcj")))
-    fold = np.asarray(tconv_int8(xq, wq, bq, 0.003, stride=stride,
-                                 padding=padding, method=method,
-                                 plan=Plan(stride, 4, "bcj",
-                                           fold_batch=True)))
-    assert (fold == grid).all(), (stride, padding, method)
-    acc = ref.iom_reference_int8(xq, wq, bq, stride=stride, padding=padding)
-    want = np.asarray(ref.requantize(acc, 0.003))
-    assert (fold == want).all(), (stride, padding, method)
-    assert fold.dtype == np.int8
 
 
 @pytest.mark.parametrize("pipeline", ["async", "sync"])

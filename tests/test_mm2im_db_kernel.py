@@ -1,4 +1,5 @@
-"""Double-buffered MM2IM kernel: bit-identity, parity, int8, dispatch.
+"""Double-buffered MM2IM kernel: bit-identity, int8 requant, dispatch.
+(Cross-method int8/f32 parity lives in ``tests/test_parity_matrix.py``.)
 
 The contract of ``kernels/mm2im_db_pallas.py`` is strict: *bit-identical*
 to the single-buffered kernel for every geometry (the two share the host
@@ -69,21 +70,6 @@ def test_db_block_and_grid_invariance(block_oh, block_oc, grid_order):
                                   block_oc=block_oc, grid_order=grid_order,
                                   interpret=True))
     assert (got == want).all()
-
-
-@pytest.mark.parametrize("method", ["mm2im", "mm2im_db"])
-def test_int8_int32_parity_both_variants(method):
-    """int8 x int8 -> int32 accumulation: bit-exact vs kernels/ref.py for
-    both registry variants, through the registry-dispatched ops.tconv."""
-    rng = np.random.default_rng(3)
-    xq = rng.integers(-128, 128, (2, 6, 6, 16), dtype=np.int8)
-    wq = rng.integers(-128, 128, (5, 5, 8, 16), dtype=np.int8)
-    bq = rng.integers(-1000, 1000, (8,), dtype=np.int32)
-    got = np.asarray(tconv(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(bq),
-                           stride=2, method=method))
-    want = np.asarray(ref.iom_reference_int8(xq, wq, bq, stride=2))
-    assert (got == want).all()
-    assert got.dtype == np.int32
 
 
 def test_int8_requant_through_db_plan():

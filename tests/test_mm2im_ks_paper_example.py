@@ -1,0 +1,111 @@
+"""Golden worked example: stride-2 3x3 kernel segregation, by hand.
+
+The smallest non-trivial segregation (DESIGN.md §2.6): a 3x3 kernel at
+stride 2, SAME padding (crop offsets 0), splits into S² = 4 stride-1
+sub-kernels.  Every number below — tap groups, packed-weight permutation,
+interleave maps, and the full output of a 2x2 input with counting
+weights — is pinned as a hand-computed literal, so a regression in the
+decomposition shows up as a readable diff against the worked example
+rather than an opaque allclose failure.
+
+Tap derivation (kernels carry kh ≡ a' + ct (mod S) for output-row
+residue a'; ct = 0 here):
+
+    residue (0,0): kh ∈ {0,2}, kw ∈ {0,2}   -> 4 taps
+    residue (0,1): kh ∈ {0,2}, kw ∈ {1}     -> 2 taps
+    residue (1,0): kh ∈ {1},   kw ∈ {0,2}   -> 2 taps
+    residue (1,1): kh ∈ {1},   kw ∈ {1}     -> 1 tap
+                                               --------
+                                               9 = Ks²
+"""
+
+import numpy as np
+
+from repro.core.segregate import (interleave_maps, pack_weights, segregate,
+                                  segregated_tconv_reference)
+from repro.kernels import ref
+from repro.kernels.mm2im_ks_pallas import mm2im_ks_tconv
+from repro.kernels.ops import tconv
+
+KS, S = 3, 2
+
+# x = [[1, 2], [3, 4]]; w[kh, kw] = 3*kh + kw + 1 (counting weights).
+X = np.arange(1, 5, dtype=np.float32).reshape(1, 2, 2, 1)
+W = np.arange(1, 10, dtype=np.float32).reshape(KS, KS, 1, 1)
+
+# Hand-computed 4x4 SAME output (out[oh, ow] = Σ x[ih,iw]·w[kh,kw] over
+# oh = 2·ih + kh, ow = 2·iw + kw; e.g. out[2,2] = 1·9 + 2·7 + 3·3 + 4·1).
+GOLD = np.array([[1.,  2.,  5.,  4.],
+                 [4.,  5., 14., 10.],
+                 [10., 14., 36., 24.],
+                 [12., 15., 34., 20.]], np.float32)
+
+
+def test_segregation_tap_groups():
+    """The 4 sub-kernels, their tap tuples, shifts and packed offsets."""
+    seg = segregate(KS, S, "SAME")
+    assert (seg.ct, seg.cl) == (0, 0)
+    assert seg.total_taps == KS * KS
+    got = [(sk.row_phase, sk.col_phase, sk.kh_taps, sk.kw_taps,
+            sk.row_shift, sk.col_shift, sk.offset)
+           for sk in seg.subkernels]
+    assert got == [
+        (0, 0, (0, 2), (0, 2), 0, 0, 0),
+        (0, 1, (0, 2), (1,),   0, 0, 4),
+        (1, 0, (1,),   (0, 2), 0, 0, 6),
+        (1, 1, (1,),   (1,),   0, 0, 8),
+    ]
+
+
+def test_packed_weight_permutation():
+    """Tap axis grouped by sub-kernel: flat order [0,2,6,8, 1,7, 3,5, 4],
+    so the counting weights pack to [1,3,7,9, 2,8, 4,6, 5]."""
+    seg = segregate(KS, S, "SAME")
+    np.testing.assert_array_equal(seg.permutation(),
+                                  [0, 2, 6, 8, 1, 7, 3, 5, 4])
+    packed = np.asarray(pack_weights(W, seg))
+    assert packed.shape == (1, KS * KS, 1)  # (Ic, Ks², Oc)
+    np.testing.assert_array_equal(packed[0, :, 0],
+                                  [1, 3, 7, 9, 2, 8, 4, 6, 5])
+
+
+def test_interleave_maps_tile_the_output():
+    """Each plane writes out[a'::2, b'::2]; the four views tile 4x4."""
+    seg = segregate(KS, S, "SAME")
+    maps = interleave_maps(seg, 4, 4)
+    want = {(0, 0): ([0, 2], [0, 2]), (0, 1): ([0, 2], [1, 3]),
+            (1, 0): ([1, 3], [0, 2]), (1, 1): ([1, 3], [1, 3])}
+    assert set(maps) == set(want)
+    seen = np.zeros((4, 4), np.int32)
+    for phase, (rows, cols) in maps.items():
+        np.testing.assert_array_equal(rows, want[phase][0])
+        np.testing.assert_array_equal(cols, want[phase][1])
+        seen[np.ix_(rows, cols)] += 1
+    assert (seen == 1).all()  # exactly-once cover, no overlap
+
+
+def test_plane_shapes_and_worked_output():
+    """Each sub-kernel's plane is 2x2, and its values are the hand table's
+    residue class — then the reference assembles exactly GOLD."""
+    seg = segregate(KS, S, "SAME")
+    for sk in seg.subkernels:
+        assert sk.plane_shape(4, 4) == (2, 2)
+    out = np.asarray(segregated_tconv_reference(X, W, stride=S,
+                                                padding="SAME"))[0, :, :, 0]
+    np.testing.assert_array_equal(out, GOLD)
+    # Residue-class spot check straight off the table: plane (1,1) is the
+    # single-tap sub-kernel — w[1,1] = 5 times the input.
+    np.testing.assert_array_equal(GOLD[1::2, 1::2], 5.0 * X[0, :, :, 0])
+
+
+def test_kernel_matches_worked_example():
+    """The Pallas kernel and registry dispatch reproduce the hand table."""
+    got = np.asarray(mm2im_ks_tconv(X, W, stride=S, padding="SAME",
+                                    interpret=True))[0, :, :, 0]
+    np.testing.assert_array_equal(got, GOLD)
+    via_ops = np.asarray(tconv(X, W, stride=S, method="mm2im_ks"))
+    np.testing.assert_array_equal(via_ops[0, :, :, 0], GOLD)
+    # And the lax gold agrees, closing the loop to the TCONV contract.
+    np.testing.assert_allclose(
+        np.asarray(ref.tconv_lax(X, W, stride=S))[0, :, :, 0], GOLD,
+        rtol=1e-6, atol=1e-6)

@@ -1,0 +1,136 @@
+"""The differential parity matrix: every registered method vs the gold.
+
+Parametrizes over ``registry.names()`` **at collection time**, so any
+kernel family registered through the ordinary ``KernelSpec`` entry point
+— including ``mm2im_ks`` added by this PR, and any future or third-party
+variant — is automatically enrolled in the full pinned grid of
+``tests/parity.py`` with zero test wiring.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from parity import (ParityCase, assert_full_parity, assert_method_parity,
+                    parity_grid)
+from repro.kernels import ref, registry
+from repro.kernels.ops import tconv
+
+METHODS = tuple(sorted(registry.names()))
+DTYPES = ("f32", "int8")
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("method", METHODS)
+def test_parity_matrix(method, dtype):
+    """method × the full pinned grid (one dtype column per test node)."""
+    assert_full_parity(method, dtype)
+
+
+def test_grid_derives_legality():
+    """The pinned grid excludes exactly the repo-wide illegal cells and
+    emits fold cells only for plan-capable methods at batch > 1."""
+    cells = list(parity_grid("mm2im"))
+    # SAME with Ks < S is unsupported everywhere (ref.crop_offsets).
+    assert not any(c.padding == "SAME" and c.ks < c.stride for c in cells)
+    # VALID stride>kernel (gapped output) IS covered.
+    assert any(c.padding == "VALID" and c.stride > c.ks for c in cells)
+    assert any(c.fold for c in cells)
+    assert not any(c.fold and c.batch == 1 for c in cells)
+    # Non-plan methods get no fold cells (the fold rides a plan).
+    assert not any(c.fold for c in parity_grid("lax"))
+    # Both dtype columns and both batches are pinned.
+    assert {c.dtype for c in cells} == {"f32", "int8"}
+    assert {c.batch for c in cells} == {1, 8}
+
+
+def test_grid_covers_activation_table():
+    """The per-cell derived epilogues collectively exercise every
+    activation and both bias arms (coverage without cell multiplication).
+    """
+    pairs = {c.bias_and_activation for c in parity_grid("mm2im")}
+    assert {a for _, a in pairs} == {"none", "relu", "tanh", "leaky_relu"}
+    assert {b for b, _ in pairs} == {True, False}
+
+
+def test_new_registry_entry_auto_enrolls():
+    """Registering a kernel is all it takes to be parity-checked: a
+    plugin wrapping the direct reference passes a grid cell through the
+    same harness entry the matrix uses, with no harness changes."""
+
+    @registry.register("parity_probe",
+                       description="ref.tconv_direct as a parity probe")
+    def _probe(x, w, *, stride, padding, epilogue, plan):
+        # Like the other unfused baselines: the dispatcher applies the
+        # (entirely unfused) epilogue remainder.
+        return ref.tconv_direct(x, w, stride=stride, padding=padding)
+
+    try:
+        assert any(True for _ in parity_grid("parity_probe"))
+        case = ParityCase(2, "SAME", 3, "f32", 1, False)
+        assert_method_parity("parity_probe", case)
+    finally:
+        assert registry.unregister("parity_probe") is not None
+
+
+# ---------------------------------------------------------------------------
+# Property-based shape fuzzing (the pinned grid's randomized complement)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    ih=st.integers(1, 7), iw=st.integers(1, 7),
+    ks=st.integers(1, 6), s=st.integers(1, 5),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    batch=st.integers(1, 3),
+    activation=st.sampled_from(["none", "relu", "tanh", "leaky_relu"]),
+    bias=st.booleans(),
+)
+def test_fuzz_shapes_all_methods(ih, iw, ks, s, padding, batch, activation,
+                                 bias):
+    """Randomized odd/even kernels, asymmetric H != W and stride > kernel
+    edge shapes through ``ops.tconv`` — every registered method vs the
+    gold.  The pinned grid freezes known-interesting cells; this sweeps
+    the shape space between them (deterministic fallback sweep when
+    hypothesis is absent)."""
+    if padding == "SAME" and ks < s:
+        return  # unsupported repo-wide (ref.crop_offsets raises)
+    seed = zlib.crc32(f"{ih}:{iw}:{ks}:{s}:{padding}:{batch}".encode())
+    rng = np.random.default_rng(seed)
+    ic, oc = 3, 4
+    x = rng.standard_normal((batch, ih, iw, ic)).astype(np.float32)
+    w = (rng.standard_normal((ks, ks, oc, ic)) * 0.1).astype(np.float32)
+    b = rng.standard_normal(oc).astype(np.float32) if bias else None
+    gold = np.asarray(tconv(x, w, b, stride=s, padding=padding,
+                            method="lax", activation=activation))
+    for method in METHODS:
+        if method == "lax":
+            continue
+        got = np.asarray(tconv(x, w, b, stride=s, padding=padding,
+                               method=method, activation=activation))
+        assert got.shape == gold.shape, \
+            f"{method} ih{ih} iw{iw} ks{ks} s{s} {padding} b{batch}"
+        np.testing.assert_allclose(
+            got, gold, rtol=1e-4, atol=1e-4,
+            err_msg=f"{method} ih{ih} iw{iw} ks{ks} s{s} {padding} "
+                    f"b{batch} act={activation} bias={bias}")
+
+
+def test_gold_contract_stride_gt_kernel():
+    """The repo's VALID output contract (``out_size``: S·(I-1)+Ks) is the
+    gold for gapped stride>kernel shapes; ``lax.conv_transpose`` pads the
+    same values with trailing zero gap rows — pin the relationship so the
+    contract divergence stays understood rather than rediscovered."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((1, 5, 5, 3)).astype(np.float32)
+    w = (rng.standard_normal((3, 3, 2, 3)) * 0.1).astype(np.float32)
+    oh = ref.out_size(5, 3, 4, "VALID")
+    full = np.asarray(ref.tconv_lax(x, w, stride=4, padding="VALID"))
+    direct = np.asarray(ref.tconv_direct(x, w, stride=4, padding="VALID"))
+    assert direct.shape[1] == oh
+    np.testing.assert_allclose(full[:, :oh, :oh], direct, rtol=1e-4,
+                               atol=1e-4)
+    assert np.all(full[:, oh:] == 0) and np.all(full[:, :, oh:] == 0)

@@ -492,14 +492,16 @@ def test_plan_free_methods_ignore_cache(monkeypatch, tmp_path):
     z = RNG.standard_normal((2, 100)).astype(np.float32)
     np.asarray(bundle.fn(gp, z))  # traces + runs without a dispatch error
 
-    # Stale cache entry naming an unregistered variant: default dispatch
-    # keeps the plan's geometry but quietly ignores the method preference.
+    # Stale cache entry naming an unregistered variant: lookup_plan skips
+    # the whole entry (with a warning) and dispatch runs the heuristic —
+    # see test_stale_method_plan_skipped_with_warning for the tier walk.
     p = TConvProblem(3, 7, 2, 3, 3, 2)
     cache.put(cache_key(p, dtype=jnp.float32, batch=1),
               Plan(2, 3, "bcj", "not_a_registered_kernel"))
     x = RNG.standard_normal((1, 3, 7, 2)).astype(np.float32)
     w = (RNG.standard_normal((3, 3, 3, 2)) * 0.1).astype(np.float32)
-    got = np.asarray(tconv(x, w, stride=2))
+    with pytest.warns(UserWarning, match="unregistered"):
+        got = np.asarray(tconv(x, w, stride=2))
     np.testing.assert_allclose(
         got, np.asarray(ref.tconv_lax(x, w, stride=2)), rtol=1e-4, atol=1e-4)
 
@@ -515,6 +517,68 @@ def test_plan_free_methods_ignore_cache(monkeypatch, tmp_path):
     np.testing.assert_allclose(
         got, np.asarray(ref.tconv_lax(x, w, stride=2)), rtol=1e-4, atol=1e-4)
     assert not ops.consumed_plans()
+
+
+def test_stale_method_plan_skipped_with_warning(monkeypatch, tmp_path):
+    """An entry whose ``Plan.method`` is not in this checkout's registry —
+    a cache or table written by a newer build with an extra kernel family
+    — must be *skipped with a warning* at every read tier, falling through
+    to the next one, and never fail dispatch (regression: lookup used to
+    return the plan and dispatch raised on the unknown method)."""
+    import json
+
+    import jax
+
+    from repro.core import autotune, plan_table
+
+    cache = _fresh_autoload(monkeypatch, tmp_path)
+    p = TConvProblem(5, 3, 2, 3, 3, 2)
+    key = cache_key(p, dtype=jnp.float32, batch=1)
+
+    # Shipped-table tier: a valid v2 table whose entry names a kernel
+    # family this build does not have.
+    tdir = tmp_path / "tables"
+    tdir.mkdir()
+    backend = jax.default_backend()
+    table = {
+        "version": 2,
+        "provenance": {"backend": backend, "jax": jax.__version__,
+                       "repeats": 1, "created": 0.0},
+        "entries": {key: {"plan": Plan(2, 3, "bcj",
+                                       "kernel_from_the_future").to_json()}},
+    }
+    (tdir / f"{backend}.json").write_text(json.dumps(table))
+    monkeypatch.setenv(plan_table.TABLE_DIR_ENV, str(tdir))
+    plan_table.reset_shipped_tables()
+
+    with pytest.warns(UserWarning, match="unregistered"):
+        assert autotune.lookup_plan(p, cache=cache) is None  # -> heuristic
+
+    # User-cache tier: a stale entry there warns too and falls through to
+    # the shipped tier (also stale here) -> still a clean miss.
+    cache.put(key, Plan(4, 3, "bcj", "another_future_kernel"))
+    with pytest.warns(UserWarning, match="unregistered"):
+        assert autotune.lookup_plan(p, cache=cache) is None
+
+    # A *valid* shipped entry underneath is reachable: the stale user
+    # cache falls through TO it instead of masking the tier.
+    good = Plan(2, 3, "bcj", "mm2im")
+    table["entries"][key]["plan"] = good.to_json()
+    (tdir / f"{backend}.json").write_text(json.dumps(table))
+    plan_table.reset_shipped_tables()
+    with pytest.warns(UserWarning, match="unregistered"):
+        hit = autotune.lookup_plan(p, cache=cache)
+    assert hit == (good, autotune.TIER_SHIPPED)
+
+    # End-to-end: dispatch under the stale user cache computes correctly.
+    x = RNG.standard_normal((1, p.ih, p.iw, p.ic)).astype(np.float32)
+    w = (RNG.standard_normal((p.ks, p.ks, p.oc, p.ic)) * 0.1
+         ).astype(np.float32)
+    with pytest.warns(UserWarning, match="unregistered"):
+        got = np.asarray(tconv(x, w, stride=p.stride))
+    np.testing.assert_allclose(
+        got, np.asarray(ref.tconv_lax(x, w, stride=p.stride)),
+        rtol=1e-4, atol=1e-4)
 
 
 def test_tuned_plan_through_layer_and_model(tmp_path):

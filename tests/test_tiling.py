@@ -108,7 +108,7 @@ def test_candidate_plans_legal_and_include_default(case):
         assert c.block_oh % s == 0 and c.block_oh >= s
         assert 1 <= c.block_oc
         assert c.grid_order in ("bcj", "cbj")
-        assert c.method in ("mm2im", "mm2im_db")
+        assert c.method in ("mm2im", "mm2im_db", "mm2im_ks")
         assert c.vmem_bytes <= budget, c.describe()
         if c.method == "mm2im_db":
             # Pipelining needs at least two row blocks to overlap.
@@ -122,12 +122,13 @@ def test_candidate_plans_legal_and_include_default(case):
 
 
 def test_candidate_plans_db_variant_coverage():
-    """Problems with >= 2 row blocks enumerate both kernel variants, and
-    the db residency model frees VMEM vs whole-input residency."""
+    """Problems with >= 2 row blocks enumerate every registered kernel
+    family, and the db residency model frees VMEM vs whole-input
+    residency."""
     p = TConvProblem(16, 16, 32, 3, 16, 1)
     cands = tiling.candidate_plans(p)
     methods = {c.method for c in cands}
-    assert methods == {"mm2im", "mm2im_db"}
+    assert methods == {"mm2im", "mm2im_db", "mm2im_ks"}
     assert (tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im_db")
             < tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im"))
     # Geometry-identical pairs differ only in modeled residency.
