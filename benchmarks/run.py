@@ -33,6 +33,7 @@ MODULES = [
     ("ablations", "benchmarks.bench_ablations"),              # kernel ablations
     ("autotune", "benchmarks.bench_autotune"),                # tuned vs default plans
     ("scale_roofline", "benchmarks.bench_scale_roofline"),    # §Roofline
+    ("serve_tconv", "benchmarks.bench_serve_tconv"),          # serving trajectory
 ]
 
 
@@ -79,10 +80,15 @@ def mm2im_summary(rows: list) -> dict:
     * ``rank_agreement`` — predicted-vs-measured ordering over this run's
       recorded head-to-heads (``core/model_fit.rank_agreement``), scored
       with the shipped per-backend calibration when one exists.  This is
-      the section ``tools/bench_gate.py`` hard-gates on.
+      the section ``tools/bench_gate.py`` hard-gates on;
+    * ``serve`` — every ``serve*`` row from ``bench_serve_tconv`` with its
+      derived fields parsed (batched-vs-sequential speedup, batch-fill
+      ratio, wait-bound flag), so the serving trajectory diffs alongside
+      the kernel one.
     """
     methods = {}
     autotune_rows = []
+    serve = {}
     tier_hits = None
     for r in rows:
         name = r["name"]
@@ -96,6 +102,8 @@ def mm2im_summary(rows: list) -> dict:
             tier_hits = _parse_derived(r["derived"])
         elif name.startswith("autotune"):
             autotune_rows.append(r)
+        elif name.startswith("serve"):
+            serve[name] = _parse_derived(r["derived"])
 
     from repro.configs.paper_models import TABLE_II
     from repro.core.perf_model import mm2im_estimate
@@ -119,21 +127,24 @@ def mm2im_summary(rows: list) -> dict:
 
     return {"methods": methods, "autotune": autotune_rows,
             "tier_hits": tier_hits, "modeled_fold_b8": modeled,
-            "rank_agreement": rank}
+            "rank_agreement": rank, "serve": serve}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names to run "
+                         "(e.g. --only autotune,serve_tconv)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the emitted rows + run metadata as JSON "
                          "(the CI perf-trajectory artifact)")
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0
     ran = []
     for name, mod in MODULES:
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         t0 = time.time()
         try:

@@ -12,7 +12,6 @@ paper runs inference on quantized frozen models where BN is folded anyway).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -20,18 +19,26 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.ops import tconv
 
+def _tconv_policy(method, plans, policy):
+    """The one copy of the per-model ``method=``/``plans=`` plumbing.
 
-def _plan_for(plans, name):
-    """Look up an explicit tile plan for TCONV layer ``name`` (or None).
+    Every generator forward takes an optional ``policy`` — an object with
+    ``.tconv(x, w, bias, *, name, stride, padding, activation)`` deciding
+    how each named TCONV layer executes (kernel method, tile plan,
+    precision).  With ``policy=None`` the legacy kwargs build the default
+    f32 :class:`repro.models.runner.TconvPolicy`, which preserves the old
+    behavior exactly: explicit ``plans`` entries win, and a missing entry
+    lets ``ops.tconv`` consult the autotuner plan tiers at trace time.
 
-    ``None`` is not "no plan": with no explicit entry, ``ops.tconv``
-    consults the autotuner's on-disk plan cache by problem key at trace
-    time, so a generator whose layers were ever tuned runs tuned plans
-    (and the tuned kernel variant) with ``plans=None`` here.
+    The import is lazy because ``models/runner.py`` imports this module at
+    module level (for its model registry) — the runner layer depends on
+    the models, not vice versa.
     """
-    return None if plans is None else plans.get(name)
+    if policy is not None:
+        return policy
+    from repro.models.runner import TconvPolicy
+    return TconvPolicy(method=method, plans=plans)
 
 
 def auto_plans(problems: dict, *, batch: int = 1, dtype=None) -> dict:
@@ -110,28 +117,32 @@ def init_dcgan_g(key, z_dim: int = 100, base: int = 1024, out_ch: int = 3,
     return params, specs
 
 
-def dcgan_generator(params, z, *, method: str = "mm2im", plans=None):
+def dcgan_generator(params, z, *, method: str = "mm2im", plans=None,
+                    policy=None):
     """z: (B, z_dim) -> images (B, 64, 64, 3) in [-1, 1].
 
     ``plans`` maps TCONV param names ('t1'..'t4') to explicit tile plans
     (``kernels.registry.Plan``) — see ``dcgan_tconv_problems`` +
-    ``core.autotune`` for producing them.
+    ``core.autotune`` for producing them.  ``policy`` supersedes both
+    kwargs (see :func:`_tconv_policy`) — it is how the runner layer routes
+    every layer through e.g. the int8 requant epilogue.
 
     The output tanh is expressed as the last TCONV's fused activation (the
     paper's PPU epilogue): the MM2IM kernels apply it before the single
     HBM store, and the dispatcher applies the identical shared activation
     for baseline methods — same numbers either way (DESIGN.md §3/§4).
     """
+    tc = _tconv_policy(method, plans, policy)
     b = z.shape[0]
     base = params["t1"].shape[3]
     x = (z @ params["proj"]).reshape(b, 4, 4, base)
     x = jax.nn.relu(batchnorm(x))
     for i in (1, 2, 3):
-        x = tconv(x, params[f"t{i}"], params[f"b{i}"], stride=2, method=method,
-                  plan=_plan_for(plans, f"t{i}"))
+        x = tc.tconv(x, params[f"t{i}"], params[f"b{i}"], name=f"t{i}",
+                     stride=2)
         x = jax.nn.relu(batchnorm(x))
-    return tconv(x, params["t4"], params["b4"], stride=2, method=method,
-                 activation="tanh", plan=_plan_for(plans, "t4"))
+    return tc.tconv(x, params["t4"], params["b4"], name="t4", stride=2,
+                    activation="tanh")
 
 
 def dcgan_tconv_layers(params) -> list:
@@ -218,8 +229,9 @@ def init_pix2pix_g(key, in_ch: int = 3, out_ch: int = 3, base: int = 64,
 
 
 def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8,
-                      plans=None):
+                      plans=None, policy=None):
     """U-Net: img (B, 2^depth, 2^depth, C) -> (B, same, same, out_ch)."""
+    tc = _tconv_policy(method, plans, policy)
     skips = []
     x = img
     for i in range(depth):
@@ -231,13 +243,38 @@ def pix2pix_generator(params, img, *, method: str = "mm2im", depth: int = 8,
     x = jax.nn.relu(skips[-1])
     for i in range(depth):
         # The final up-TCONV fuses the output tanh (PPU epilogue).
-        x = tconv(x, params[f"d{i}"], params[f"db{i}"], stride=2, method=method,
-                  activation="tanh" if i == depth - 1 else "none",
-                  plan=_plan_for(plans, f"d{i}"))
+        x = tc.tconv(x, params[f"d{i}"], params[f"db{i}"], name=f"d{i}",
+                     stride=2,
+                     activation="tanh" if i == depth - 1 else "none")
         if i < depth - 1:
             x = batchnorm(x)
             x = jnp.concatenate([jax.nn.relu(x), skips[depth - 2 - i]], -1)
     return x
+
+
+def pix2pix_depth(params) -> int:
+    """U-Net depth recovered from the encoder param names ('e0'..'e{d-1}')."""
+    depth = 0
+    while f"e{depth}" in params:
+        depth += 1
+    return depth
+
+
+def pix2pix_tconv_problems(params) -> dict:
+    """TConvProblem per decoder up-TCONV ('d0'..'d{depth-1}').
+
+    Up-layer ``i`` runs at spatial ``2^i`` (the bottleneck is 1x1 after
+    ``depth`` stride-2 encoder halvings of a ``2^depth`` input); channels
+    come from the HWOI weights.
+    """
+    from repro.core.maps import TConvProblem
+
+    probs = {}
+    for i in range(pix2pix_depth(params)):
+        w = params[f"d{i}"]
+        probs[f"d{i}"] = TConvProblem(2 ** i, 2 ** i, w.shape[3],
+                                      w.shape[0], w.shape[2], 2)
+    return probs
 
 
 # ---------------------------------------------------------------------------
@@ -263,7 +300,8 @@ def init_fsrcnn(key, d: int = 32, s: int = 5, m: int = 2, upscale: int = 3,
 
 
 def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im",
-           plans=None):
+           plans=None, policy=None):
+    tc = _tconv_policy(method, plans, policy)
     x = jax.nn.relu(conv2d(img, params["feat"]))
     x = jax.nn.relu(conv2d(x, params["shrink"]))
     i = 0
@@ -271,9 +309,22 @@ def fsrcnn(params, img, *, upscale: int = 3, method: str = "mm2im",
         x = jax.nn.relu(conv2d(x, params[f"map{i}"]))
         i += 1
     x = jax.nn.relu(conv2d(x, params["expand"]))
-    return tconv(x, params["deconv"], params["db"], stride=upscale,
-                 padding="SAME", method=method,
-                 plan=_plan_for(plans, "deconv"))
+    return tc.tconv(x, params["deconv"], params["db"], name="deconv",
+                    stride=upscale)
+
+
+def fsrcnn_tconv_problems(params, *, input_hw: int = 16,
+                          upscale: int = 3) -> dict:
+    """TConvProblem of the FSRCNN deconv tail at a given input resolution.
+
+    Unlike DCGAN/pix2pix, spatial geometry is not recoverable from the
+    params (every conv preserves hw), so the caller names ``input_hw``.
+    """
+    from repro.core.maps import TConvProblem
+
+    w = params["deconv"]
+    return {"deconv": TConvProblem(input_hw, input_hw, w.shape[3],
+                                   w.shape[0], w.shape[2], upscale)}
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +353,9 @@ def init_styletransfer(key, base: int = 32, n_res: int = 5):
     return params, specs
 
 
-def styletransfer(params, img, *, method: str = "mm2im", plans=None):
+def styletransfer(params, img, *, method: str = "mm2im", plans=None,
+                  policy=None):
+    tc = _tconv_policy(method, plans, policy)
     x = jax.nn.relu(batchnorm(conv2d(img, params["c1"])))
     x = jax.nn.relu(batchnorm(conv2d(x, params["c2"], 2)))
     x = jax.nn.relu(batchnorm(conv2d(x, params["c3"], 2)))
@@ -311,11 +364,25 @@ def styletransfer(params, img, *, method: str = "mm2im", plans=None):
         h = jax.nn.relu(batchnorm(conv2d(x, params[f"r{i}a"])))
         x = x + batchnorm(conv2d(h, params[f"r{i}b"]))
         i += 1
-    x = jax.nn.relu(batchnorm(tconv(x, params["t1"], params["tb1"], stride=2,
-                                    method=method,
-                                    plan=_plan_for(plans, "t1"))))
-    x = jax.nn.relu(batchnorm(tconv(x, params["t2"], params["tb2"], stride=2,
-                                    method=method,
-                                    plan=_plan_for(plans, "t2"))))
-    return tconv(x, params["out"], params["ob"], stride=1, method=method,
-                 activation="tanh", plan=_plan_for(plans, "out"))
+    x = jax.nn.relu(batchnorm(tc.tconv(x, params["t1"], params["tb1"],
+                                       name="t1", stride=2)))
+    x = jax.nn.relu(batchnorm(tc.tconv(x, params["t2"], params["tb2"],
+                                       name="t2", stride=2)))
+    return tc.tconv(x, params["out"], params["ob"], name="out", stride=1,
+                    activation="tanh")
+
+
+def styletransfer_tconv_problems(params, *, input_hw: int = 32) -> dict:
+    """TConvProblem per style-transfer TCONV at a given input resolution
+    (hw must be divisible by 4: two stride-2 downsamples precede 't1')."""
+    from repro.core.maps import TConvProblem
+
+    t1, t2, out = params["t1"], params["t2"], params["out"]
+    return {
+        "t1": TConvProblem(input_hw // 4, input_hw // 4, t1.shape[3],
+                           t1.shape[0], t1.shape[2], 2),
+        "t2": TConvProblem(input_hw // 2, input_hw // 2, t2.shape[3],
+                           t2.shape[0], t2.shape[2], 2),
+        "out": TConvProblem(input_hw, input_hw, out.shape[3],
+                            out.shape[0], out.shape[2], 1),
+    }

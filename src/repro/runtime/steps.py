@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import registry
 from repro.distributed import sharding as shd
 from repro.models import gan, lm
+from repro.models import runner as runner_mod
 from repro.models.config import ModelConfig
 from repro.optim import adamw
 
@@ -313,26 +314,16 @@ def resolve_gan_plans(g_params, *, batch: int, dtype=jnp.float32,
                       method: str = "mm2im") -> dict:
     """Per-layer tile plans for a DCGAN generator, cache-backed.
 
-    Precedence per layer: explicit ``plans`` entry > autotuner cache hit >
-    nothing (``ops.tconv`` falls back to the ``plan_blocks`` heuristic).
-    The returned mapping is what the step builders close over (exposed as
-    ``StepBundle.meta['plans']``), so callers can log which layers run
-    tuned and on which kernel variant.
-
-    When ``method`` does not accept explicit tile plans (the baselines:
-    'lax', 'iom_unfused', ...), the cache is not consulted — passing a
-    cached plan to those methods would be a dispatch error — and only the
-    caller's explicit ``plans`` (their mistake to make) pass through.
+    Compat wrapper over the generic
+    :meth:`repro.models.runner.GeneratorRunner.resolve_plans` (which any
+    registered model family gets for free).  Precedence per layer:
+    explicit ``plans`` entry > autotuner cache hit > nothing (trace-time
+    tier lookup / heuristic); plan-incapable methods skip the cache and
+    pass only the caller's explicit entries through.
     """
-    from repro.kernels import registry as kernel_registry
-
-    if not kernel_registry.get(method).supports_plan:
-        return dict(plans) if plans else {}
-    resolved = gan.auto_plans(gan.dcgan_tconv_problems(g_params),
-                              batch=batch, dtype=dtype)
-    if plans:
-        resolved.update(plans)
-    return resolved
+    r = runner_mod.GeneratorRunner(runner_mod.get_spec("dcgan"), g_params,
+                                   method=method)
+    return r.resolve_plans(batch=batch, dtype=dtype, plans=plans)
 
 
 def make_gan_train_step(
@@ -356,6 +347,7 @@ def make_gan_train_step(
         warmup_steps=0, total_steps=1, schedule="constant")
     plans = resolve_gan_plans(g_params, batch=batch, plans=plans,
                               method=method)
+    policy = runner_mod.TconvPolicy(method=method, plans=plans)
     img_size, out_ch = gan.dcgan_output_geometry(g_params)
 
     def bce(logits, is_real: bool):
@@ -366,7 +358,7 @@ def make_gan_train_step(
         gp, g_opt, dp, d_opt = state
 
         def d_loss(dpp):
-            fake = gan.dcgan_generator(gp, z, method=method, plans=plans)
+            fake = gan.dcgan_generator(gp, z, policy=policy)
             return bce(gan.dcgan_discriminator(dpp, real), True) + \
                 bce(gan.dcgan_discriminator(dpp, fake), False)
 
@@ -374,7 +366,7 @@ def make_gan_train_step(
         dp, d_opt, _ = adamw.apply(dg, d_opt, dp, opt_cfg)
 
         def g_loss(gpp):
-            fake = gan.dcgan_generator(gpp, z, method=method, plans=plans)
+            fake = gan.dcgan_generator(gpp, z, policy=policy)
             return bce(gan.dcgan_discriminator(dp, fake), True)
 
         gl, gg = jax.value_and_grad(g_loss)(gp)
@@ -393,6 +385,38 @@ def make_gan_train_step(
                       meta={"plans": plans, "method": method})
 
 
+def make_runner_sample_step(
+    runner: "runner_mod.GeneratorRunner",
+    *,
+    batch: int,
+    precision: str = "f32",
+    plans: Optional[dict] = None,
+    kind: Optional[str] = None,
+) -> StepBundle:
+    """Serve step for ANY registered generator family: inputs -> outputs.
+
+    The generic successor of the DCGAN-only sample step: plans resolve
+    through the runner's problem enumeration (so pix2pix/FSRCNN/style-
+    transfer get cache-backed plans too), and ``precision='int8'`` routes
+    every TCONV through the calibrated requant-Epilogue policy.
+    """
+    dtype = jnp.int8 if precision == "int8" else jnp.float32
+    plans = runner.resolve_plans(batch=batch, dtype=dtype, plans=plans)
+    policy = runner.policy(precision=precision, plans=plans)
+
+    def sample(params, x):
+        return runner.spec.forward(params, x, runner.options, policy=policy)
+
+    fn = jax.jit(sample)
+    return StepBundle(
+        fn=fn,
+        abstract_args=(jax.eval_shape(lambda: runner.params),
+                       runner.input_spec(batch)),
+        kind=kind or f"{runner.name}_sample",
+        meta={"plans": plans, "method": runner.method,
+              "precision": precision})
+
+
 def make_gan_sample_step(
     g_params,
     *,
@@ -401,19 +425,19 @@ def make_gan_sample_step(
     method: str = "mm2im",
     plans: Optional[dict] = None,
 ) -> StepBundle:
-    """Generator-only serve step: ``z -> images``, cached plans consumed."""
-    plans = resolve_gan_plans(g_params, batch=batch, plans=plans,
-                              method=method)
+    """Generator-only serve step: ``z -> images``, cached plans consumed.
 
-    def sample(gp, z):
-        return gan.dcgan_generator(gp, z, method=method, plans=plans)
-
-    az = jax.ShapeDtypeStruct((batch, z_dim), jnp.float32)
-    fn = jax.jit(sample)
-    return StepBundle(fn=fn,
-                      abstract_args=(jax.eval_shape(lambda: g_params), az),
-                      kind="gan_sample",
-                      meta={"plans": plans, "method": method})
+    DCGAN compat wrapper over :func:`make_runner_sample_step` (``z_dim``
+    is recovered from the params; the kwarg is kept for callers that
+    passed it explicitly and must agree with the projection weight).
+    """
+    r = runner_mod.GeneratorRunner(runner_mod.get_spec("dcgan"), g_params,
+                                   method=method)
+    if z_dim != r.input_shape()[0]:
+        raise ValueError(f"z_dim={z_dim} disagrees with params "
+                         f"(proj expects {r.input_shape()[0]})")
+    return make_runner_sample_step(r, batch=batch, plans=plans,
+                                   kind="gan_sample")
 
 
 def make_step_for_cell(arch: str, shape: str, mesh) -> StepBundle:

@@ -1,0 +1,20 @@
+"""Production serving for the paper's TCONV models (DESIGN.md §9).
+
+Shape-bucketed continuous batching over the :class:`GeneratorRunner`
+contract: requests snap to the ``(model, shape, precision, batch)``
+bucket with tuned-plan coverage (``bucketing``), a wait-or-flush batcher
+fills fold_batch-tuned batch sizes with a bounded deadline (``batcher``),
+and server start pre-compiles every bucket against the shipped plan
+tables (``warmup``).  Entry point: :class:`TconvServer` (``server``).
+"""
+
+from repro.serve.batcher import Batcher, Request
+from repro.serve.bucketing import (AdmissionError, BucketKey, BucketSpec,
+                                   snap)
+from repro.serve.server import TconvServer
+from repro.serve.warmup import WarmupRecord, warm_runner, warm_server
+
+__all__ = [
+    "AdmissionError", "Batcher", "BucketKey", "BucketSpec", "Request",
+    "TconvServer", "WarmupRecord", "snap", "warm_runner", "warm_server",
+]

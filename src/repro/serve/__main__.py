@@ -1,0 +1,82 @@
+"""Smoke the TCONV server from the command line.
+
+``python -m repro.serve --models dcgan,fsrcnn --requests 24 --rate 200``
+
+Builds CPU-sized runners, warms every (model, precision) bucket, pushes
+open-loop synthetic traffic through the background drain thread, and
+prints the per-bucket stats snapshot.  The measured version of this loop
+(arrival-rate x image-size x precision sweep, percentile reporting) is
+``benchmarks/bench_serve_tconv.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models.runner import make_runner
+from repro.serve.server import TconvServer
+
+SMOKE_RUNNERS = {
+    "dcgan": dict(init_kw={"scale_down": 16}),
+    "pix2pix": dict(init_kw={"depth": 4, "scale_down": 16}),
+    "fsrcnn": dict(init_kw={"d": 8, "s": 4, "m": 1}, input_hw=8),
+    "styletransfer": dict(init_kw={"base": 8, "n_res": 1}, input_hw=16),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="dcgan,fsrcnn")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="mean arrival rate, requests/s (Poisson)")
+    ap.add_argument("--precisions", default="f32,int8")
+    ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = [m for m in args.models.split(",") if m]
+    precisions = tuple(p for p in args.precisions.split(",") if p)
+    runners = {n: make_runner(n, key=jax.random.PRNGKey(i),
+                              **SMOKE_RUNNERS[n])
+               for i, n in enumerate(names)}
+    server = TconvServer(runners, max_wait_s=args.max_wait_ms / 1e3)
+
+    t0 = time.perf_counter()
+    records = server.warmup(precisions=precisions)
+    print(f"[serve] warmed {len(records)} buckets in "
+          f"{time.perf_counter() - t0:.2f}s")
+    for rec in records:
+        print(f"[serve]   {rec.model}:b{rec.batch}:{rec.precision} "
+              f"compile={rec.seconds:.2f}s tuned={rec.tuned_layers}"
+              f"/{rec.total_layers} tiers={dict(rec.tiers)}")
+
+    rng = np.random.default_rng(args.seed)
+    gaps = rng.exponential(1.0 / args.rate, args.requests)
+    reqs = []
+    with server:
+        t0 = time.perf_counter()
+        for i in range(args.requests):
+            time.sleep(gaps[i])
+            name = names[i % len(names)]
+            precision = precisions[(i // len(names)) % len(precisions)]
+            x = np.asarray(runners[name].example_inputs(1, seed=i))[0]
+            reqs.append(server.submit(name, x, precision=precision))
+        for r in reqs:
+            r.result(timeout=300)
+        wall = time.perf_counter() - t0
+
+    lats = sorted(1e3 * r.latency_s for r in reqs)
+    print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
+          f"({len(reqs) / wall:.1f} req/s), "
+          f"p50={lats[len(lats) // 2]:.1f}ms p99={lats[-1]:.1f}ms")
+    print(json.dumps(server.stats(), indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Wait-or-flush request batching — fill fold_batch-tuned batch sizes.
+
+One FIFO queue per bucket.  A bucket flushes when either:
+
+* **full** — it holds at least ``target_batch`` requests: the batch the
+  plans were tuned for is ready, dispatch immediately; or
+* **deadline** — its oldest request has waited ``max_wait_s``: dispatch
+  the partial batch (padded up to the bucket shape by the server) so p99
+  queue wait is bounded by the configured deadline rather than by traffic.
+
+Time is injected (``ready(now=...)``) so flush decisions are
+deterministic under test; the server passes ``time.monotonic()``.
+All methods are thread-safe (``submit`` runs on caller threads, the drain
+loop on the server thread).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.bucketing import BucketKey, BucketSpec
+
+FLUSH_FULL = "full"
+FLUSH_DEADLINE = "deadline"
+
+
+class Request:
+    """One in-flight request: payload + a thread-safe result slot."""
+
+    __slots__ = ("rid", "model", "inputs", "precision", "t_enqueue",
+                 "t_done", "_event", "_value", "_error")
+
+    def __init__(self, rid: int, model: str, inputs, precision: str,
+                 t_enqueue: float):
+        self.rid = rid
+        self.model = model
+        self.inputs = inputs
+        self.precision = precision
+        self.t_enqueue = t_enqueue
+        self.t_done: Optional[float] = None
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def set_result(self, value, t_done: float) -> None:
+        self._value = value
+        self.t_done = t_done
+        self._event.set()
+
+    def set_error(self, err: BaseException, t_done: float) -> None:
+        self._error = err
+        self.t_done = t_done
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served "
+                               f"within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Enqueue-to-result wall time (None while in flight)."""
+        return None if self.t_done is None else self.t_done - self.t_enqueue
+
+
+class Batcher:
+    """Per-bucket FIFO queues with the wait-or-flush policy."""
+
+    def __init__(self, *, max_wait_s: float = 0.05):
+        self.max_wait_s = float(max_wait_s)
+        self._lock = threading.Lock()
+        self._queues: Dict[BucketKey, deque] = {}
+        self._specs: Dict[BucketKey, BucketSpec] = {}
+
+    def put(self, spec: BucketSpec, request: Request) -> None:
+        with self._lock:
+            self._specs[spec.key] = spec
+            self._queues.setdefault(spec.key, deque()).append(request)
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest time any queued request's wait deadline expires (the
+        server's sleep bound), or None if nothing is queued."""
+        with self._lock:
+            heads = [q[0].t_enqueue for q in self._queues.values() if q]
+        return min(heads) + self.max_wait_s if heads else None
+
+    def ready(self, now: float, *,
+              force: bool = False) -> List[Tuple[BucketSpec, list, str]]:
+        """Pop every batch due at ``now`` as (spec, requests, reason).
+
+        Full batches flush regardless of age; a remaining partial flushes
+        once its oldest member has waited ``max_wait_s`` (or immediately
+        with ``force=True`` — shutdown/drain).
+        """
+        out: List[Tuple[BucketSpec, list, str]] = []
+        with self._lock:
+            for key, q in self._queues.items():
+                spec = self._specs[key]
+                target = max(spec.target_batch, 1)
+                while len(q) >= target:
+                    out.append((spec, [q.popleft() for _ in range(target)],
+                                FLUSH_FULL))
+                if q and (force or
+                          now - q[0].t_enqueue >= self.max_wait_s):
+                    out.append((spec, list(q), FLUSH_DEADLINE))
+                    q.clear()
+        return out

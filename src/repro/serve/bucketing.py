@@ -1,0 +1,128 @@
+"""Shape-bucketed admission — snap each request to a tuned-plan bucket.
+
+A serving bucket is one ``(model, input shape, precision, batch)`` key:
+every request admitted to a bucket executes through the same memoized
+jit'd forward at the bucket's target batch size.  Admission does two
+jobs:
+
+* **Reject** what the server cannot run without a recompile storm: an
+  input whose shape is not the model's (shape-polymorphic serving would
+  defeat the tuned-plan premise), or an unknown precision.
+* **Snap** the rest to the best batch size the tuning substrate knows
+  about.  Batch folding (plan schema v2) made large batches the fast
+  path, so candidate batches are scored by how many of the model's TCONV
+  layers resolve a tuned plan (user cache or shipped table) at that
+  ``(problem, dtype, batch)`` key — a fully-tuned batch-8 bucket beats a
+  partially-tuned batch-4 one, and with no tuned coverage at all the
+  request falls back to ``default_batch`` on the ``plan_blocks``
+  heuristic (correct, just not tuned).
+
+The tier accounting rides ``core.autotune.lookup_plan`` — the same
+four-tier precedence the dispatcher consults at trace time — so what the
+bucket *predicts* is exactly what the compile will *consume* (asserted by
+the warmup tests via ``ops.consumed_plans()``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+TIER_HEURISTIC = "heuristic"
+
+
+class AdmissionError(ValueError):
+    """Request rejected at admission (shape/precision/model mismatch)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    model: str
+    shape: Tuple[int, ...]          # per-request input shape (no batch dim)
+    precision: str                  # 'f32' | 'int8'
+    batch: int                      # target (padded) execution batch
+
+    def __str__(self) -> str:
+        hw = "x".join(str(d) for d in self.shape)
+        return f"{self.model}:{hw}:{self.precision}:b{self.batch}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """A bucket plus its plan-coverage attribution at admission time."""
+
+    key: BucketKey
+    tuned_layers: int               # layers with a user-cache/shipped plan
+    total_layers: int
+    tiers: Tuple[Tuple[str, int], ...]  # (tier, layer count), sorted
+
+    @property
+    def target_batch(self) -> int:
+        return self.key.batch
+
+    @property
+    def fully_tuned(self) -> bool:
+        return self.total_layers > 0 and self.tuned_layers == self.total_layers
+
+
+def plan_tiers(runner, *, batch: int, precision: str) -> Tuple[Counter, int]:
+    """(tier -> layer count, total layers) for one candidate batch size."""
+    from repro.core.autotune import lookup_plan
+
+    dtype = jnp.int8 if precision == "int8" else jnp.float32
+    tiers: Counter = Counter()
+    probs = runner.tconv_problems()
+    for prob in probs.values():
+        hit = lookup_plan(prob, dtype=dtype, batch=batch)
+        tiers[hit[1] if hit is not None else TIER_HEURISTIC] += 1
+    return tiers, len(probs)
+
+
+def snap(runner, shape, precision: str, *,
+         candidate_batches: Tuple[int, ...] = (8, 4, 2, 1),
+         default_batch: int = 1, name: Optional[str] = None) -> BucketSpec:
+    """Admit one request: validate, then pick the best-tuned batch bucket.
+
+    Raises :class:`AdmissionError` for a shape or precision the server
+    will not run.  Candidates are scored ``(fully_tuned, tuned_layers,
+    batch)`` — prefer complete plan coverage, then coverage breadth, then
+    the largest batch (fold_batch makes big batches the fast path).  If no
+    candidate has any tuned layer, the bucket is ``default_batch`` on the
+    heuristic tier.  ``name`` overrides the bucket's model field (the
+    server's serving name may differ from ``runner.name`` when one family
+    is served at several geometries).
+    """
+    from repro.models.runner import PRECISIONS
+
+    if precision not in PRECISIONS:
+        raise AdmissionError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}")
+    expect = runner.input_shape()
+    if tuple(shape) != expect:
+        raise AdmissionError(
+            f"model {runner.name!r} serves inputs of shape {expect}, "
+            f"got {tuple(shape)}")
+
+    best = None  # (score, batch, tiers, total)
+    for b in sorted(set(int(b) for b in candidate_batches), reverse=True):
+        tiers, total = plan_tiers(runner, batch=b, precision=precision)
+        tuned = total - tiers.get(TIER_HEURISTIC, 0)
+        score = (tuned == total and total > 0, tuned, b)
+        if best is None or score > best[0]:
+            best = (score, b, tiers, total)
+
+    _, batch, tiers, total = best
+    tuned = total - tiers.get(TIER_HEURISTIC, 0)
+    if tuned == 0 and batch != default_batch:
+        # Nothing tuned anywhere: no reason to pad requests up to a large
+        # batch — serve at the default on the heuristic tier.
+        batch = int(default_batch)
+        tiers, total = plan_tiers(runner, batch=batch, precision=precision)
+        tuned = total - tiers.get(TIER_HEURISTIC, 0)
+    return BucketSpec(
+        key=BucketKey(name or runner.name, expect, precision, batch),
+        tuned_layers=tuned, total_layers=total,
+        tiers=tuple(sorted(tiers.items())))

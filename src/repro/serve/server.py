@@ -1,0 +1,252 @@
+"""The in-process TCONV model server: admission -> batcher -> jit cache.
+
+``TconvServer`` owns a set of named :class:`GeneratorRunner`s and serves
+single-sample requests against them:
+
+    server = TconvServer({"dcgan": make_runner("dcgan", ...)})
+    server.warmup()                       # plan-table-warmed compiles
+    with server:                          # background drain thread
+        req = server.submit("dcgan", z, precision="int8")
+        img = req.result(timeout=5)
+
+Dataflow per request: :func:`bucketing.snap` validates the input and
+picks the tuned-batch bucket (memoized per ``(model, shape, precision)``
+so admission does not re-stat the plan cache per request); the
+:class:`batcher.Batcher` queues it under the wait-or-flush policy; the
+drain loop pops due batches, pads partials with zeros up to the bucket's
+target batch (the tuned jit shape is reused — no recompiles), executes
+the runner's memoized jit'd forward, and fulfills each request with its
+row of the output.
+
+Execution is synchronous under the hood (``serve_once``) so tests can
+drive the server deterministically with an injected clock; ``start()``
+wraps the same drain in a daemon thread for real traffic.
+
+Numerics caveat: the models compute batch statistics inline (see
+``models/gan.py``), so outputs depend on batch composition — a padded
+partial batch is the *defined* behavior, matching the batched forward at
+the bucket shape, not a per-request isolated forward.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import bucketing, warmup as warmup_mod
+from repro.serve.batcher import Batcher, FLUSH_FULL, Request
+from repro.serve.bucketing import AdmissionError, BucketKey, BucketSpec
+
+
+class _BucketStats:
+    """Mutable per-bucket counters (one lock-guarded instance each)."""
+
+    __slots__ = ("requests", "completed", "failed", "batches", "flush_full",
+                 "flush_deadline", "fill_sum", "wait_sum", "wait_max",
+                 "compile_hits")
+
+    def __init__(self):
+        self.requests = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        self.flush_full = 0
+        self.flush_deadline = 0
+        self.fill_sum = 0.0
+        self.wait_sum = 0.0
+        self.wait_max = 0.0
+        self.compile_hits = 0
+
+    def snapshot(self, spec: BucketSpec) -> dict:
+        return {
+            "target_batch": spec.target_batch,
+            "tuned_layers": spec.tuned_layers,
+            "total_layers": spec.total_layers,
+            "tiers": dict(spec.tiers),
+            "requests": self.requests,
+            "completed": self.completed,
+            "failed": self.failed,
+            "batches": self.batches,
+            "flush_full": self.flush_full,
+            "flush_deadline": self.flush_deadline,
+            "batch_fill_ratio": (self.fill_sum / self.batches
+                                 if self.batches else 0.0),
+            "queue_wait_mean_s": (self.wait_sum / self.completed
+                                  if self.completed else 0.0),
+            "queue_wait_max_s": self.wait_max,
+            "compile_hits": self.compile_hits,
+        }
+
+
+class TconvServer:
+    """Shape-bucketed continuous batching over GeneratorRunners."""
+
+    def __init__(self, runners: Mapping[str, object], *,
+                 max_wait_s: float = 0.05,
+                 candidate_batches: Tuple[int, ...] = (8, 4, 2, 1),
+                 default_batch: int = 1):
+        self.runners: Dict[str, object] = dict(runners)
+        self.max_wait_s = float(max_wait_s)
+        self.candidate_batches = tuple(candidate_batches)
+        self.default_batch = int(default_batch)
+        self._batcher = Batcher(max_wait_s=max_wait_s)
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+        self._buckets: Dict[tuple, BucketSpec] = {}
+        self._stats: Dict[BucketKey, _BucketStats] = {}
+        self._rejected = 0
+        self._thread: Optional[threading.Thread] = None
+        self._wake = threading.Event()
+        self._running = False
+
+    # -- admission ----------------------------------------------------------
+
+    def bucket_for(self, model: str, shape, precision: str) -> BucketSpec:
+        """Snap (model, shape, precision) to its bucket, memoized."""
+        if model not in self.runners:
+            raise AdmissionError(f"unknown model {model!r}; serving "
+                                 f"{sorted(self.runners)}")
+        memo_key = (model, tuple(shape), precision)
+        with self._lock:
+            spec = self._buckets.get(memo_key)
+        if spec is None:
+            spec = bucketing.snap(self.runners[model], shape, precision,
+                                  candidate_batches=self.candidate_batches,
+                                  default_batch=self.default_batch,
+                                  name=model)
+            with self._lock:
+                self._buckets[memo_key] = spec
+                self._stats.setdefault(spec.key, _BucketStats())
+        return spec
+
+    def submit(self, model: str, inputs, precision: str = "f32") -> Request:
+        """Enqueue one single-sample request; returns its result handle."""
+        arr = np.asarray(inputs, np.float32)
+        try:
+            spec = self.bucket_for(model, arr.shape, precision)
+        except AdmissionError:
+            with self._lock:
+                self._rejected += 1
+            raise
+        req = Request(next(self._rid), model, arr, precision,
+                      time.monotonic())
+        self._batcher.put(spec, req)
+        with self._lock:
+            self._stats[spec.key].requests += 1
+        self._wake.set()
+        return req
+
+    # -- execution ----------------------------------------------------------
+
+    def _run_batch(self, spec: BucketSpec, reqs, reason: str,
+                   now: float) -> None:
+        runner = self.runners[spec.key.model]
+        target = spec.target_batch
+        precision = spec.key.precision
+        stats = self._stats[spec.key]
+        hit = runner.has_compiled(batch=target, precision=precision)
+        xs = np.zeros((target,) + spec.key.shape, np.float32)
+        for i, r in enumerate(reqs):
+            xs[i] = r.inputs
+        try:
+            fn = runner.jitted(batch=target, precision=precision)
+            out = np.asarray(fn(jnp.asarray(xs)))
+        except Exception as err:  # noqa: BLE001 — fulfil, don't wedge
+            t = time.monotonic()
+            for r in reqs:
+                r.set_error(err, t)
+            with self._lock:
+                stats.failed += len(reqs)
+                stats.batches += 1
+            return
+        t_done = time.monotonic()
+        for i, r in enumerate(reqs):
+            r.set_result(out[i], t_done)
+        waits = [max(now - r.t_enqueue, 0.0) for r in reqs]
+        with self._lock:
+            stats.completed += len(reqs)
+            stats.batches += 1
+            stats.compile_hits += int(hit)
+            stats.fill_sum += len(reqs) / target
+            stats.wait_sum += sum(waits)
+            stats.wait_max = max(stats.wait_max, max(waits))
+            if reason == FLUSH_FULL:
+                stats.flush_full += 1
+            else:
+                stats.flush_deadline += 1
+
+    def serve_once(self, now: Optional[float] = None, *,
+                   force: bool = False) -> int:
+        """Run every batch due at ``now`` (injected for tests); returns the
+        number of requests served."""
+        now = time.monotonic() if now is None else now
+        served = 0
+        for spec, reqs, reason in self._batcher.ready(now, force=force):
+            self._run_batch(spec, reqs, reason, now)
+            served += len(reqs)
+        return served
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Serve until the queue is empty (flushing partials immediately)."""
+        deadline = time.monotonic() + timeout
+        while self._batcher.pending():
+            self.serve_once(force=True)
+            if time.monotonic() > deadline:
+                raise TimeoutError("drain did not empty the queue "
+                                   f"within {timeout}s")
+
+    # -- background loop ----------------------------------------------------
+
+    def start(self) -> "TconvServer":
+        if self._thread is None:
+            self._running = True
+            self._thread = threading.Thread(target=self._loop,
+                                            name="tconv-serve", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._running = False
+            self._wake.set()
+            self._thread.join(timeout=30.0)
+            self._thread = None
+            self.drain()  # whatever raced in after the loop exited
+
+    def _loop(self) -> None:
+        while self._running:
+            if self.serve_once():
+                continue
+            nd = self._batcher.next_deadline()
+            wait = (self.max_wait_s if nd is None
+                    else max(nd - time.monotonic(), 0.0))
+            self._wake.wait(min(wait, 0.05))
+            self._wake.clear()
+
+    def __enter__(self) -> "TconvServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- observability ------------------------------------------------------
+
+    def warmup(self, *, precisions: Tuple[str, ...] = ("f32",),
+               batches: Optional[Tuple[int, ...]] = None):
+        """Pre-compile every admitted bucket (see ``serve/warmup.py``)."""
+        return warmup_mod.warm_server(self, precisions=precisions,
+                                      batches=batches)
+
+    def stats(self) -> dict:
+        """Point-in-time snapshot of every bucket's counters."""
+        with self._lock:
+            by_key = {spec.key: spec for spec in self._buckets.values()}
+            buckets = {str(key): self._stats[key].snapshot(by_key[key])
+                       for key in self._stats}
+            return {"buckets": buckets, "rejected": self._rejected,
+                    "pending": self._batcher.pending()}

@@ -1,0 +1,81 @@
+"""Plan-table-warmed jit pre-compilation — bound first-request latency.
+
+At server start every runner's bucket forward is compiled and executed
+once on synthetic inputs, so the first real request pays a jit-cache hit
+instead of a trace+compile.  Because the runner's jitted path leaves
+``plan=None`` per layer, compilation consults the four plan tiers at
+trace time and records each hit in ``ops.consumed_plans()`` — the
+:class:`WarmupRecord` captures that delta, which is how tests (and
+operators) verify the server really compiled against the shipped tables
+rather than silently falling back to the heuristic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.serve import bucketing
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupRecord:
+    """What one (model, batch, precision) warmup compile did."""
+
+    model: str
+    batch: int
+    precision: str
+    seconds: float
+    tuned_layers: int
+    total_layers: int
+    tiers: Tuple[Tuple[str, int], ...]      # lookup_plan attribution
+    consumed: Tuple[Tuple[str, str], ...]   # (cache_key, tier) at trace time
+
+
+def warm_runner(runner, *, batch: int,
+                precision: str = "f32") -> WarmupRecord:
+    """Compile + execute one bucket forward; attribute its plan tiers."""
+    from repro.kernels import ops
+
+    before = len(ops.consumed_plans())
+    t0 = time.perf_counter()
+    fn = runner.jitted(batch=batch, precision=precision)
+    jax.block_until_ready(fn(runner.example_inputs(batch=batch)))
+    seconds = time.perf_counter() - t0
+    consumed = tuple((key, tier) for key, _plan, tier
+                     in ops.consumed_plans()[before:])
+    tiers, total = bucketing.plan_tiers(runner, batch=batch,
+                                        precision=precision)
+    tuned = total - tiers.get(bucketing.TIER_HEURISTIC, 0)
+    return WarmupRecord(model=runner.name, batch=batch, precision=precision,
+                        seconds=seconds, tuned_layers=tuned,
+                        total_layers=total,
+                        tiers=tuple(sorted(tiers.items())),
+                        consumed=consumed)
+
+
+def warm_server(server, *, precisions: Tuple[str, ...] = ("f32",),
+                batches: Optional[Tuple[int, ...]] = None
+                ) -> List[WarmupRecord]:
+    """Warm every (model, precision) bucket the server would admit to.
+
+    ``batches=None`` warms each model at its admission-snapped target
+    batch (what real traffic will hit); an explicit tuple warms all of
+    those sizes for every model instead.
+    """
+    records: List[WarmupRecord] = []
+    for name, runner in server.runners.items():
+        for precision in precisions:
+            if batches is None:
+                spec = server.bucket_for(name, runner.input_shape(),
+                                         precision)
+                sizes: Tuple[int, ...] = (spec.target_batch,)
+            else:
+                sizes = tuple(batches)
+            for b in sizes:
+                records.append(warm_runner(runner, batch=b,
+                                           precision=precision))
+    return records
