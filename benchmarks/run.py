@@ -81,6 +81,10 @@ def mm2im_summary(rows: list) -> dict:
       recorded head-to-heads (``core/model_fit.rank_agreement``), scored
       with the shipped per-backend calibration when one exists.  This is
       the section ``tools/bench_gate.py`` hard-gates on;
+    * ``large_image`` — the og-vs-mm2im-vs-ks cross-method head-to-heads
+      on the >=32x32 stride-4 regime (``autotune_large_*_ogcmp``), parsed
+      so the gather-family trajectory diffs at a glance (the raw rows
+      also stay in ``autotune`` for the rank-agreement gate);
     * ``serve`` — every ``serve*`` row from ``bench_serve_tconv`` with its
       derived fields parsed (batched-vs-sequential speedup, batch-fill
       ratio, wait-bound flag), so the serving trajectory diffs alongside
@@ -89,6 +93,7 @@ def mm2im_summary(rows: list) -> dict:
     methods = {}
     autotune_rows = []
     serve = {}
+    large_image = {}
     tier_hits = None
     for r in rows:
         name = r["name"]
@@ -102,6 +107,8 @@ def mm2im_summary(rows: list) -> dict:
             tier_hits = _parse_derived(r["derived"])
         elif name.startswith("autotune"):
             autotune_rows.append(r)
+            if name.startswith("autotune_large_"):
+                large_image[name] = _parse_derived(r["derived"])
         elif name.startswith("serve"):
             serve[name] = _parse_derived(r["derived"])
 
@@ -127,7 +134,8 @@ def mm2im_summary(rows: list) -> dict:
 
     return {"methods": methods, "autotune": autotune_rows,
             "tier_hits": tier_hits, "modeled_fold_b8": modeled,
-            "rank_agreement": rank, "serve": serve}
+            "rank_agreement": rank, "large_image": large_image,
+            "serve": serve}
 
 
 def main() -> None:

@@ -64,6 +64,51 @@ def is_small_problem(p: TConvProblem) -> bool:
             and p.ks <= 5)
 
 
+# Large-image / stride-4 slice (FSRCNN/pix2pix decoder shapes): the 261
+# paper configs stop at 11x11 inputs, so the shipped tables could never
+# attribute the regime where slab residency caps MM2IM and the gather-style
+# family (kernels/mm2im_og_pallas.py) is expected to win.  Odd kernels >=
+# the stride (SAME TCONV requires Ks >= S); channels stay small so
+# interpret-mode tuning of a 64x64 input finishes in seconds, matching the
+# is_small_problem philosophy of the committed cpu.json.
+LARGE_IH = (16, 32, 64)
+LARGE_KS = (5, 7)
+LARGE_IC = (16, 32)
+LARGE_OC = (16,)
+LARGE_S = 4
+
+
+def is_large_problem(p: TConvProblem) -> bool:
+    """Member of the large-image sweep regime (the mm2im_og target).
+
+    Delegates to ``core.model_fit.is_large_problem`` — the same predicate
+    splits the calibration's ``@large`` fit regimes, so sweep membership
+    and cost-model scale class can never drift apart.
+    """
+    from repro.core.model_fit import is_large_problem as _canonical
+    return _canonical(p)
+
+
+def large_image_sweep() -> Tuple[TConvProblem, ...]:
+    """Large-image / stride-4 sweep slice appended to the 261 configs.
+
+    A separate function (not part of :func:`synthetic_sweep`) so the
+    paper's published 261-config count stays exact; ``tools/tune_sweep.py``
+    concatenates both.
+    """
+    probs = []
+    for ih in LARGE_IH:
+        for ks in LARGE_KS:
+            for ic in LARGE_IC:
+                for oc in LARGE_OC:
+                    probs.append(TConvProblem(ih, ih, ic, ks, oc, LARGE_S))
+    # The FSRCNN h32 serve bucket (d=16 feature width, single-channel
+    # output, x4 upscale): the exact deconv key serve admission / warmup
+    # resolve, so the serving path hits a tuned large-image plan.
+    probs.append(TConvProblem(32, 32, 16, 9, 1, LARGE_S))
+    return tuple(probs)
+
+
 def synthetic_sweep() -> Tuple[TConvProblem, ...]:
     """The 261 TCONV problem configurations of Fig. 6/7."""
     probs = []

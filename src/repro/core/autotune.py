@@ -75,7 +75,8 @@ from repro.core import model_fit, tiling
 from repro.core.epilogue import Epilogue
 from repro.core.maps import TConvProblem
 from repro.core.perf_model import (HW, V5E, mm2im_db_estimate,
-                                   mm2im_estimate, mm2im_ks_estimate)
+                                   mm2im_estimate, mm2im_ks_estimate,
+                                   mm2im_og_estimate)
 from repro.kernels import ops as kernel_ops
 from repro.kernels.registry import Plan
 
@@ -101,6 +102,7 @@ METHOD_ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
     "mm2im_ks": mm2im_ks_estimate,
+    "mm2im_og": mm2im_og_estimate,
 }
 
 

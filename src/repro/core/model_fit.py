@@ -105,8 +105,9 @@ class Sample:
     source: str = ""
 
     @property
-    def regime(self) -> Tuple[str, bool]:
-        return (self.plan.method or "mm2im", bool(self.plan.fold_batch))
+    def regime(self) -> Tuple[str, bool, bool]:
+        return (self.plan.method or "mm2im", bool(self.plan.fold_batch),
+                is_large_problem(self.problem))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,9 +198,9 @@ def _parse_derived_str(derived: str) -> Dict[str, str]:
             for k, _, v in [part.partition("=")]}
 
 
-def _parse_geom(d: Dict[str, str], method: str,
-                fold: bool = False) -> Optional[Plan]:
-    m = re.fullmatch(r"oh(\d+)/oc(\d+)/(\w+)", d.get("geom", ""))
+def _parse_geom(d: Dict[str, str], method: str, fold: bool = False,
+                key: str = "geom") -> Optional[Plan]:
+    m = re.fullmatch(r"oh(\d+)/oc(\d+)/(\w+)", d.get(key, ""))
     if m is None:
         return None
     return Plan(int(m.group(1)), int(m.group(2)), m.group(3), method, fold)
@@ -222,7 +223,11 @@ def pairs_from_bench(doc: dict) -> List[RankPair]:
     * ``autotune_ih*_..._dbcmp`` — single- vs double-buffered at the
       heuristic default geometry (``sb_us`` / ``db_us``);
     * ``autotune_fold_dcgan1_<method>`` — grid-batch vs folded at fixed
-      geometry (``grid_us`` / ``fold_us``).
+      geometry (``grid_us`` / ``fold_us``);
+    * ``autotune_large_*_ogcmp`` — the large-image cross-method
+      head-to-head (``og_us`` / ``mm2im_us`` / ``ks_us`` at a shared
+      geometry), yielding one og-vs-mm2im and one og-vs-mm2im_ks pair
+      per problem.
 
     Newer docs embed the timed geometry (``geom=ohX/ocY/<order>``); for
     older docs the dbcmp geometry is recomputed from the heuristic (it is
@@ -246,7 +251,26 @@ def pairs_from_bench(doc: dict) -> List[RankPair]:
             pairs.append(RankPair(name, p, 1, 32, pa, pb,
                                   float(d["sb_us"]), float(d["db_us"])))
             continue
-        m = re.fullmatch(r"autotune_fold_dcgan1_(mm2im(?:_db|_ks)?)", name)
+        m = re.fullmatch(r"autotune_large_ih(\d+)_ic(\d+)_ks(\d+)_oc(\d+)"
+                         r"_s(\d+)_ogcmp", name)
+        if m and "og_us" in d:
+            ih, ic, ks, oc, s = (int(g) for g in m.groups())
+            p = TConvProblem(ih, ih, ic, ks, oc, s)
+            geom = _parse_geom(d, "mm2im_og") or _default_geometry(p, 1)
+            pog = Plan(geom.block_oh, geom.block_oc, geom.grid_order,
+                       "mm2im_og")
+            for rival, us_key in (("mm2im", "mm2im_us"),
+                                  ("mm2im_ks", "ks_us")):
+                if us_key not in d:
+                    continue
+                pr = Plan(geom.block_oh, geom.block_oc, geom.grid_order,
+                          rival)
+                pairs.append(RankPair(f"{name}:og_vs_{rival}", p, 1, 32,
+                                      pog, pr, float(d["og_us"]),
+                                      float(d[us_key])))
+            continue
+        m = re.fullmatch(r"autotune_fold_dcgan1_(mm2im(?:_db|_ks|_og)?)",
+                         name)
         if m and "grid_us" in d and "fold_us" in d:
             method = m.group(1)
             p = _FOLD_BENCH_PROBLEM
@@ -264,10 +288,17 @@ def pairs_from_bench(doc: dict) -> List[RankPair]:
 
 
 def samples_from_bench(doc: dict) -> List[Sample]:
-    """Flatten a doc's head-to-head pairs into fit samples."""
+    """Flatten a doc's head-to-head pairs into fit samples.
+
+    Deduplicated: the large-image rows share one og measurement across
+    two pairs, and a repeated timing must not vote twice in the fit.
+    """
     out: List[Sample] = []
     for pair in pairs_from_bench(doc):
-        out.extend(pair.samples())
+        for s in pair.samples():
+            if dataclasses.replace(s, source="") not in {
+                    dataclasses.replace(o, source="") for o in out}:
+                out.append(s)
     return out
 
 
@@ -344,9 +375,26 @@ def _nnls(X: np.ndarray, y: np.ndarray) -> np.ndarray:
 
 _GLOBAL_REGIME = "*"
 
+#: Scale split for the fit regimes.  The large-image stride-4 slice
+#: (``configs/paper_models.large_image_sweep``) runs 1-2 orders of
+#: magnitude longer than the small sweep members, and the deliberately
+#: absolute-error NNLS of :func:`fit_coefficients` is only well-posed
+#: within one scale class — without the split, 100ms large-image samples
+#: outvote the sub-millisecond shapes inside a shared ``mm2im_db`` regime
+#: and the recorded small-shape sb/db rankings regress.
+LARGE_IH_MIN = 16
+LARGE_STRIDE_MIN = 4
 
-def _regime_key(method: str, fold: bool) -> str:
-    return f"{method}+fold" if fold else method
+
+def is_large_problem(p: TConvProblem) -> bool:
+    """Canonical large-image predicate: fit-regime scale split *and*
+    sweep-slice membership (``configs/paper_models`` re-exports it)."""
+    return p.ih >= LARGE_IH_MIN and p.stride >= LARGE_STRIDE_MIN
+
+
+def _regime_key(method: str, fold: bool, large: bool = False) -> str:
+    key = f"{method}+fold" if fold else method
+    return f"{key}@large" if large else key
 
 
 def _fit_one(samples: Sequence[Sample], hw: HW) -> Coeffs:
@@ -363,11 +411,14 @@ def _fit_one(samples: Sequence[Sample], hw: HW) -> Coeffs:
 class FittedHW:
     """Per-backend calibrated cost model: regime -> :class:`Coeffs`.
 
-    ``regimes`` keys are ``'<method>'`` / ``'<method>+fold'`` plus the
-    ``'*'`` global fallback fit over every sample, so ``predict_us``
-    always returns a finite, mutually comparable score — a third-party
-    kernel variant with no samples ranks with the global coefficients,
-    not a different unit system.
+    ``regimes`` keys are ``'<method>'`` / ``'<method>+fold'`` with an
+    ``'@large'`` suffix for the large-image scale class, plus the ``'*'``
+    global fallback fit over every sample, so ``predict_us`` always
+    returns a finite, mutually comparable score — a third-party kernel
+    variant with no samples ranks with the global coefficients, not a
+    different unit system.  A large-problem lookup degrades to the same
+    method's small-scale regime before the global one, so fit files
+    predating the scale split keep their old behavior.
     """
 
     backend: str
@@ -375,10 +426,12 @@ class FittedHW:
     regimes: Dict[str, Coeffs]
     provenance: dict
 
-    def coeffs_for(self, method: Optional[str],
-                   fold: bool = False) -> Coeffs:
-        key = _regime_key(method or "mm2im", fold)
+    def coeffs_for(self, method: Optional[str], fold: bool = False,
+                   large: bool = False) -> Coeffs:
+        key = _regime_key(method or "mm2im", fold, large)
         c = self.regimes.get(key)
+        if large and (c is None or c.n_samples < MIN_REGIME_SAMPLES):
+            c = self.regimes.get(_regime_key(method or "mm2im", fold))
         if c is None or c.n_samples < MIN_REGIME_SAMPLES:
             c = self.regimes.get(_GLOBAL_REGIME, c) or Coeffs()
         return c
@@ -386,7 +439,8 @@ class FittedHW:
     def predict_us(self, p: TConvProblem, plan: Plan, *, batch: int = 1,
                    bits: int = 32, hw: HW = V5E) -> float:
         """Calibrated wall-time prediction (us) for a plan on a problem."""
-        c = self.coeffs_for(plan.method, plan.fold_batch)
+        c = self.coeffs_for(plan.method, plan.fold_batch,
+                            large=is_large_problem(p))
         return float(features(p, plan, batch=batch, bits=bits, hw=hw)
                      @ c.vector)
 
@@ -416,6 +470,10 @@ def fit_coefficients(samples: Iterable[Sample], *, backend: str,
     are where misranks cost real time, and relative weighting lets the
     sub-millisecond tail outvote them (that is exactly how the recorded
     fold-db misrank survived the uncalibrated model's sanity checks).
+    The complementary guard is the ``@large`` regime split
+    (:func:`is_large_problem`): absolute error is only well-posed within
+    one scale class, so the large-image stride-4 samples fit their own
+    regimes instead of outvoting the small-shape ones.
     """
     samples = list(samples)
     if not samples:

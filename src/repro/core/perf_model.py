@@ -312,6 +312,79 @@ def mm2im_ks_estimate(
     )
 
 
+def mm2im_og_estimate(
+    p: TConvProblem,
+    batch: int = 1,
+    *,
+    block_oh: Optional[int] = None,
+    block_oc: Optional[int] = None,
+    bits: int = 8,
+    grid_order: str = "auto",
+    hw: HW = V5E,
+    fold_batch: bool = False,
+    requant: Optional[bool] = None,
+) -> Estimate:
+    """Output-gathered implicit GEMM (``kernels/mm2im_og_pallas``).
+
+    Host staging and HBM-resident traffic match the single-buffered MM2IM
+    (whole input lands once, weights are a permuted relayout — same
+    bytes), but both roofline terms change shape:
+
+    * **compute** — per residue class one ``(bi·Iw', Jh·Jw·Ic) @
+      (Jh·Jw·Ic, boc)`` product: M covers exactly the output pixels
+      (no ``n_slab`` halo rows, no ``Ks²``-wide N), and the tap reduction
+      rides the K-dimension.  Tile count sums only effectual work, like
+      the KS family, but with output-exact M and tap-deep K.
+    * **memory** — the differentiating term is **gather-read bytes vs
+      scatter-write bytes**: staging the gathered operand re-reads each
+      input element once per tap that uses it (``Σ_sk Jh·Jw·bi·Iw'·Ic``
+      bytes per grid cell), where the scatter-style families instead pay
+      accumulator/plane read-modify-write traffic.  The gather bytes are
+      added to ``hbm_bytes`` so the calibration layer
+      (``core/model_fit.py``) can fit the trade as a regime-distinct
+      coefficient; in exchange every output element is written exactly
+      once and no partial sum is ever re-read.
+
+    At stride 1 the single residue class gathers all ``Ks²`` taps — the
+    amplification is maximal and MM2IM should win; at large stride and
+    large image the per-class tap count collapses toward 1 while MM2IM's
+    slab residency (and KS's halo-extended M) keep growing — the regime
+    this family exists for.
+    """
+    from repro.core.segregate import segregate  # avoid cycle
+    from repro.kernels.mm2im_pallas import plan_blocks
+
+    base = mm2im_estimate(
+        p, batch, block_oh=block_oh, block_oc=block_oc, bits=bits,
+        grid_order=grid_order, hw=hw, fold_batch=fold_batch, requant=requant)
+    if block_oh is None or block_oc is None:
+        block_oh, block_oc = plan_blocks(
+            p.ih, p.iw, p.ic, p.ks, p.oc, p.stride, p.padding,
+            in_bytes=bits // 8, vmem_budget=int(hw.vmem_bytes * 0.75))
+    bi = block_oh // p.stride
+    iw_p = -(-p.ow // p.stride)  # padded residue-plane width (ow_p / S)
+    seg = segregate(p.ks, p.stride, p.padding)
+    m_unit = batch if fold_batch else 1
+    tiles = sum(
+        mxu_tiles(m_unit * bi * iw_p, block_oc, sk.taps * p.ic, hw.mxu_dim)
+        for sk in seg.subkernels if sk.taps)
+    issued = base.n_launches * tiles * hw.mxu_dim**3
+    gather_bytes = (base.n_launches * m_unit
+                    * sum(sk.taps * bi * iw_p * p.ic
+                          for sk in seg.subkernels if sk.taps)
+                    * (bits // 8))
+    hbm = base.hbm_bytes + gather_bytes
+    return dataclasses.replace(
+        base,
+        method="mm2im_og",
+        t_compute=2 * issued / _dtype_peak(hw, bits),
+        t_memory=hbm / hw.hbm_bw,
+        issued_macs=issued,
+        hbm_bytes=hbm,
+        issued_tiles=base.n_launches * tiles,
+    )
+
+
 def iom_unfused_estimate(p: TConvProblem, batch: int = 1, *, bits: int = 8,
                          hw: HW = V5E) -> Estimate:
     """Unfused IOM: dense MatMul -> HBM intermediate -> col2im scatter pass.
@@ -386,6 +459,7 @@ ESTIMATORS = {
     "mm2im": mm2im_estimate,
     "mm2im_db": mm2im_db_estimate,
     "mm2im_ks": mm2im_ks_estimate,
+    "mm2im_og": mm2im_og_estimate,
     "iom_unfused": iom_unfused_estimate,
     "zero_insertion": zero_insertion_estimate,
     "tdc": tdc_estimate,
@@ -394,7 +468,7 @@ ESTIMATORS = {
 
 #: Methods whose estimators accept the full plan-geometry kwargs
 #: (``block_oh``/``block_oc``/``grid_order``/``fold_batch``).
-PLAN_AWARE_METHODS = frozenset({"mm2im", "mm2im_db", "mm2im_ks"})
+PLAN_AWARE_METHODS = frozenset({"mm2im", "mm2im_db", "mm2im_ks", "mm2im_og"})
 
 
 def estimate_for_plan(p: TConvProblem, batch: int = 1, *, plan=None,

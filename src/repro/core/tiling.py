@@ -34,7 +34,7 @@ class TilePlan:
     grid_order: str
     vmem_bytes: int
     halo_overhead: float  # recomputed-slab fraction vs ideal (dense-MXU cost)
-    method: str = "mm2im"  # kernel variant: 'mm2im' | 'mm2im_db' | 'mm2im_ks'
+    method: str = "mm2im"  # 'mm2im' | 'mm2im_db' | 'mm2im_ks' | 'mm2im_og'
     fold_batch: bool = False  # plan v2: batch folded into the MatMul M-dim
 
     def describe(self) -> str:
@@ -77,6 +77,12 @@ def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
     taps touch) plus the residue planes — strictly smaller MatMul scratch
     whenever the stride drops taps.
 
+    ``'mm2im_og'`` also keeps the whole input resident but stages a
+    *gathered* operand per residue class — ``(bi·Iw', Jh·Jw·Ic)`` input
+    bytes for the widest sub-kernel (one class is staged at a time) —
+    plus the S² residue planes it writes exactly once; there is no
+    ``Ks²``-wide MatMul scratch and no accumulator re-read at all.
+
     ``fold_batch=True`` multiplies the batch-concatenated residencies by
     ``batch``: the folded single-buffered kernel holds the whole
     ``(B, Ihp, Iw, Ic)`` input block, the folded pipeline two
@@ -98,6 +104,14 @@ def vmem_bytes(p: TConvProblem, block_oh: int, block_oc: int,
         mm_acc = (sum(bmul * (bi + sk.jh - 1) * p.iw * sk.taps
                       * block_oc * 4
                       for sk in seg.subkernels if sk.taps)
+                  + bmul * block_oh * ow_p * block_oc * 4)     # planes
+    elif method == "mm2im_og":
+        from repro.core.segregate import segregate  # local: avoid cycle
+
+        seg = segregate(p.ks, p.stride, p.padding)
+        iw_p = ow_p // p.stride
+        gmax = max((sk.taps for sk in seg.subkernels), default=0)
+        mm_acc = (bmul * bi * iw_p * gmax * p.ic * ebytes      # gathered op
                   + bmul * block_oh * ow_p * block_oc * 4)     # planes
     else:
         mm_acc = 2 * bmul * n_slab * p.iw * p.ks**2 * block_oc * 4  # mm+acc

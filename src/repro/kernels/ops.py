@@ -18,6 +18,11 @@ unfused-epilogue remainder, for every precision.  The built-in methods:
                           sub-MatMuls written to interleaved output views,
                           no col2im scatter, no ineffectual MACs
                           (``mm2im_ks_pallas``; core/segregate.py).
+  * ``'mm2im_og'``      — output-gathered implicit GEMM: each output tile
+                          gathers its strided input contributions and
+                          reduces taps inside the MXU K-dimension — no
+                          scatter, no inter-block accumulation
+                          (``mm2im_og_pallas``; DESIGN.md §2.7).
   * ``'iom_unfused'``   — paper Eq. (2) unfused: MatMul -> HBM -> col2im
                           scatter (the XLA-level baseline).
   * ``'zero_insertion'``— §II-A method (i) baseline.
@@ -80,6 +85,7 @@ from repro.core.epilogue import Epilogue
 from repro.kernels import baselines, ref, registry
 from repro.kernels.mm2im_db_pallas import mm2im_db_tconv
 from repro.kernels.mm2im_ks_pallas import mm2im_ks_tconv
+from repro.kernels.mm2im_og_pallas import mm2im_og_tconv
 from repro.kernels.mm2im_pallas import mm2im_tconv
 from repro.kernels.registry import Plan, PlanLike
 
@@ -138,6 +144,7 @@ def _make_mm2im_diff(kernel_fn):
 _mm2im_diff = _make_mm2im_diff(mm2im_tconv)
 _mm2im_db_diff = _make_mm2im_diff(mm2im_db_tconv)
 _mm2im_ks_diff = _make_mm2im_diff(mm2im_ks_tconv)
+_mm2im_og_diff = _make_mm2im_diff(mm2im_og_tconv)
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +197,14 @@ registry.register(
     description="kernel-segregated MM2IM: S^2 stride-1 dense sub-MatMuls, "
                 "interleaved output views, zero ineffectual MACs")(
         _make_mm2im_impl(_mm2im_ks_diff, mm2im_ks_tconv))
+
+registry.register(
+    "mm2im_og", fuses=("bias", "requant", "activation"), supports_plan=True,
+    supports_int8=True,
+    description="output-gathered implicit GEMM: per-residue gathered "
+                "operands, tap reduction inside the MXU K-dimension, "
+                "no scatter and no inter-block accumulation")(
+        _make_mm2im_impl(_mm2im_og_diff, mm2im_og_tconv))
 
 
 @registry.register(

@@ -26,12 +26,16 @@ the warmup tests via ``ops.consumed_plans()``).
 from __future__ import annotations
 
 import dataclasses
+import logging
+import math
 from collections import Counter
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 TIER_HEURISTIC = "heuristic"
+
+log = logging.getLogger(__name__)
 
 
 class AdmissionError(ValueError):
@@ -81,6 +85,42 @@ def plan_tiers(runner, *, batch: int, precision: str) -> Tuple[Counter, int]:
     return tiers, len(probs)
 
 
+def nearest_tuned_key(prob, *, dtype, batch: int) -> Optional[str]:
+    """The tuned key (user cache or shipped table) closest to a problem.
+
+    Distance is the sum of |log| ratios over the continuous dims plus
+    flat penalties for kernel/stride/dtype mismatch — crude, but the
+    point is operational: when a shape misses every tuned bucket, the
+    admission log should say which tuned key it *almost* was, so the
+    operator knows whether to extend the sweep
+    (``tools/tune_sweep.py``, e.g. the large-image slice) or fix the
+    model config.  Returns None when nothing tuned exists at all.
+    """
+    from repro.core import autotune, model_fit
+    from repro.core.plan_table import shipped_table
+
+    keys = set(autotune.shared_cache().keys())
+    table = shipped_table()
+    if table is not None:
+        keys.update(table.keys())
+    want_dt = jnp.dtype(dtype).name
+    best = None
+    for key in keys:
+        try:
+            p, dt, _hw, b = model_fit.parse_cache_key(key)
+        except ValueError:
+            continue
+        dist = sum(abs(math.log(a / b_)) for a, b_ in
+                   ((p.ih, prob.ih), (p.iw, prob.iw), (p.ic, prob.ic),
+                    (p.oc, prob.oc), (b, batch))) \
+            + abs(p.ks - prob.ks) + 2 * abs(p.stride - prob.stride) \
+            + (0.0 if jnp.dtype(dt).name == want_dt else 1.0) \
+            + (0.0 if p.padding == prob.padding else 1.0)
+        if best is None or dist < best[0]:
+            best = (dist, key)
+    return best[1] if best else None
+
+
 def snap(runner, shape, precision: str, *,
          candidate_batches: Tuple[int, ...] = (8, 4, 2, 1),
          default_batch: int = 1, name: Optional[str] = None) -> BucketSpec:
@@ -118,8 +158,24 @@ def snap(runner, shape, precision: str, *,
     tuned = total - tiers.get(TIER_HEURISTIC, 0)
     if tuned == 0 and batch != default_batch:
         # Nothing tuned anywhere: no reason to pad requests up to a large
-        # batch — serve at the default on the heuristic tier.
+        # batch — serve at the default on the heuristic tier.  Log the
+        # miss with the nearest tuned key: large-image shapes landing
+        # here usually mean the sweep lacks the model's decoder slice.
         batch = int(default_batch)
+        probs = runner.tconv_problems()
+        if probs:
+            probe = max(probs.values(),
+                        key=lambda p: (p.ih * p.iw, p.ic * p.oc))
+            near = nearest_tuned_key(
+                probe, dtype=jnp.int8 if precision == "int8"
+                else jnp.float32, batch=batch)
+            log.warning(
+                "bucket %s:%s:%s has no tuned plan at any candidate "
+                "batch; falling back to heuristic default_batch=%d "
+                "(largest layer %s; nearest tuned key: %s)",
+                name or runner.name,
+                "x".join(str(d) for d in expect), precision, batch,
+                probe, near or "<none — empty cache and no shipped table>")
         tiers, total = plan_tiers(runner, batch=batch, precision=precision)
         tuned = total - tiers.get(TIER_HEURISTIC, 0)
     return BucketSpec(

@@ -119,6 +119,90 @@ def test_fuzz_shapes_all_methods(ih, iw, ks, s, padding, batch, activation,
                     f"b{batch} act={activation} bias={bias}")
 
 
+# ---------------------------------------------------------------------------
+# Large-image / stride-4 cells (the mm2im_og sweep regime, slow-marked)
+# ---------------------------------------------------------------------------
+
+#: (ih, iw, ks, stride, padding, batch, fold) — the FSRCNN/pix2pix decoder
+#: regime of ``paper_models.large_image_sweep``: inputs far past the
+#: pinned grid's 5x4, stride 4, odd kernels, including a folded batch-8
+#: cell.  Channels stay tiny so interpret mode finishes in seconds.
+LARGE_CELLS = (
+    (16, 16, 5, 4, "SAME", 1, False),
+    (32, 32, 5, 4, "SAME", 8, True),
+    (32, 24, 7, 4, "VALID", 2, False),
+)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", [m for m in METHODS if m != "lax"])
+def test_large_image_parity(method):
+    """Every registered family vs the gold on large-image stride-4 shapes.
+
+    The pinned grid's 5x4 inputs never exercise multi-row-block slab
+    windows at stride 4; these cells do (plus rectangular VALID and a
+    folded batch-8 run, which must stay bit-identical to grid-batch)."""
+    from repro.kernels.registry import Plan
+
+    supports_plan = registry.get(method).supports_plan
+    ic, oc = 3, 4
+    for ih, iw, ks, s, padding, batch, fold in LARGE_CELLS:
+        rng = np.random.default_rng(zlib.crc32(
+            f"large:{ih}:{iw}:{ks}:{s}:{padding}:{batch}".encode()))
+        x = rng.standard_normal((batch, ih, iw, ic)).astype(np.float32)
+        w = (rng.standard_normal((ks, ks, oc, ic)) * 0.1).astype(np.float32)
+        gold = np.asarray(tconv(x, w, stride=s, padding=padding,
+                                method="lax"))
+        plan = Plan(2 * s, oc, "bcj", fold_batch=fold and supports_plan) \
+            if supports_plan else None
+        got = np.asarray(tconv(x, w, stride=s, padding=padding,
+                               method=method, plan=plan))
+        np.testing.assert_allclose(
+            got, gold, rtol=1e-4, atol=1e-4,
+            err_msg=f"{method} ih{ih} iw{iw} ks{ks} s{s} {padding} "
+                    f"b{batch} fold={fold}")
+        if fold and supports_plan:
+            grid = np.asarray(tconv(
+                x, w, stride=s, padding=padding, method=method,
+                plan=Plan(2 * s, oc, "bcj", fold_batch=False)))
+            assert (got == grid).all(), \
+                f"{method}: folded large-image result != grid-batch"
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(
+    ih=st.sampled_from([8, 12, 16, 24, 32]),
+    iw=st.sampled_from([8, 16, 32]),
+    ks=st.sampled_from([3, 5, 7, 9]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    batch=st.integers(1, 2),
+)
+def test_fuzz_large_image_stride4(ih, iw, ks, padding, batch):
+    """Stride-4 complement of the small-shape fuzzer: large-image inputs
+    through every registered method vs the gold (SAME cells only where
+    Ks >= S, the repo-wide legality rule)."""
+    s = 4
+    if padding == "SAME" and ks < s:
+        return  # unsupported repo-wide (ref.crop_offsets raises)
+    seed = zlib.crc32(f"large:{ih}:{iw}:{ks}:{padding}:{batch}".encode())
+    rng = np.random.default_rng(seed)
+    ic, oc = 3, 4
+    x = rng.standard_normal((batch, ih, iw, ic)).astype(np.float32)
+    w = (rng.standard_normal((ks, ks, oc, ic)) * 0.1).astype(np.float32)
+    gold = np.asarray(tconv(x, w, stride=s, padding=padding, method="lax"))
+    for method in METHODS:
+        if method == "lax":
+            continue
+        got = np.asarray(tconv(x, w, stride=s, padding=padding,
+                               method=method))
+        assert got.shape == gold.shape, \
+            f"{method} ih{ih} iw{iw} ks{ks} s{s} {padding} b{batch}"
+        np.testing.assert_allclose(
+            got, gold, rtol=1e-4, atol=1e-4,
+            err_msg=f"{method} ih{ih} iw{iw} ks{ks} s{s} {padding} b{batch}")
+
+
 def test_gold_contract_stride_gt_kernel():
     """The repo's VALID output contract (``out_size``: S·(I-1)+Ks) is the
     gold for gapped stride>kernel shapes; ``lax.conv_transpose`` pads the

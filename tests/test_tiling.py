@@ -108,7 +108,7 @@ def test_candidate_plans_legal_and_include_default(case):
         assert c.block_oh % s == 0 and c.block_oh >= s
         assert 1 <= c.block_oc
         assert c.grid_order in ("bcj", "cbj")
-        assert c.method in ("mm2im", "mm2im_db", "mm2im_ks")
+        assert c.method in ("mm2im", "mm2im_db", "mm2im_ks", "mm2im_og")
         assert c.vmem_bytes <= budget, c.describe()
         if c.method == "mm2im_db":
             # Pipelining needs at least two row blocks to overlap.
@@ -128,7 +128,7 @@ def test_candidate_plans_db_variant_coverage():
     p = TConvProblem(16, 16, 32, 3, 16, 1)
     cands = tiling.candidate_plans(p)
     methods = {c.method for c in cands}
-    assert methods == {"mm2im", "mm2im_db", "mm2im_ks"}
+    assert methods == {"mm2im", "mm2im_db", "mm2im_ks", "mm2im_og"}
     assert (tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im_db")
             < tiling.vmem_bytes(p, 4, 16, bits=32, method="mm2im"))
     # Geometry-identical pairs differ only in modeled residency.

@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_models import (TABLE_II, is_small_problem,
-                                        synthetic_sweep)
+                                        large_image_sweep, synthetic_sweep)
 from repro.core import plan_table
 from repro.core.autotune import (PlanCache, autotune_result, cache_key,
                                  default_cache_path)
@@ -74,13 +74,18 @@ _DTYPES = {
 
 
 def sweep_problems() -> list[TConvProblem]:
-    """The 261 synthetic configs + Table II model rows, deduplicated."""
+    """261 synthetic configs + Table II rows + the large-image slice,
+    deduplicated.  The large-image / stride-4 members
+    (``paper_models.large_image_sweep``) extend the tuned keyspace into
+    the FSRCNN/pix2pix decoder regime the paper's sweep never reaches —
+    they are excluded from ``--small`` automatically (none satisfies
+    ``is_small_problem``)."""
     probs = list(synthetic_sweep())
     seen = set(probs)
-    for row in TABLE_II:
-        if row.problem not in seen:
-            seen.add(row.problem)
-            probs.append(row.problem)
+    for p in [row.problem for row in TABLE_II] + list(large_image_sweep()):
+        if p not in seen:
+            seen.add(p)
+            probs.append(p)
     return probs
 
 
