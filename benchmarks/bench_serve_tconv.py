@@ -29,6 +29,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.models.runner import make_runner
+from repro.serve.resilience import FaultInjector, ResilienceConfig
 from repro.serve.server import TconvServer
 
 TARGET_BATCH = 8
@@ -120,6 +121,95 @@ def sequential_throughput(runner, *, precision: str,
     return n / (time.perf_counter() - t0)
 
 
+def run_chaos(runners: dict, model: str, *, precision: str = "f32",
+              n: int = N_REQUESTS, seed: int = 0) -> None:
+    """Degraded-mode regime: the same traffic shape as :func:`run_traffic`
+    but with deterministic faults injected, reporting what the resilience
+    layer did about them (``serve_chaos_*`` rows — their own BENCH
+    section; ``tools/bench_gate.py`` excludes them from latency banding
+    because degraded-mode latency measures the injected fault, not the
+    kernels).
+
+    Three rows:
+
+    * ``serve_chaos_ladder_*`` — every 2nd batch's tuned rung fails
+      transiently: each batch retries once then descends; every request
+      still completes, and the rung split + retry count land in the row.
+    * ``serve_chaos_shed_*`` — a closed burst into a depth-bounded queue
+      with no drain thread running: the overflow sheds at admission
+      (``QueueFullError``), then the drain serves exactly what was
+      admitted.
+    * ``serve_chaos_breaker_*`` — the bucket is poisoned (every rung
+      fails): K consecutive batch failures trip the breaker and later
+      submits shed at admission instead of queueing doomed work.
+    """
+    from repro.serve.bucketing import ShedError
+
+    # -- ladder: transient tuned-rung faults, everything still completes.
+    inj = FaultInjector(fail_nth_batch=2, seed=seed)
+    server = TconvServer(runners, max_wait_s=MAX_WAIT_S,
+                         fault_injector=inj)
+    server.warmup(precisions=(precision,))
+    xs = np.asarray(runners[model].example_inputs(n, seed=seed))
+    t0 = time.perf_counter()
+    with server:
+        reqs = [server.submit(model, xs[i], precision=precision)
+                for i in range(n)]
+        done = sum(1 for r in reqs if r.result(timeout=600) is not None)
+    wall = time.perf_counter() - t0
+    b = next(b for k, b in server.stats()["buckets"].items()
+             if k.startswith(f"{model}:") and b["requests"])
+    emit(f"serve_chaos_ladder_{model}_{precision}", None,
+         f"completed={b['completed']};failed={b['failed']};"
+         f"retries={b['retries']};degraded={b['degraded']};"
+         f"rungs={'/'.join(f'{k}:{v}' for k, v in sorted(b['rungs'].items()))};"
+         f"injected_faults={inj.injected.get('fail', 0)};"
+         f"thr_rps={done / wall:.2f};all_served={int(done == n)}")
+
+    # -- shed: bounded queue, burst admitted with the drain loop stopped.
+    depth = 4
+    server = TconvServer(runners, max_wait_s=MAX_WAIT_S,
+                         resilience_config=ResilienceConfig(
+                             max_queue_depth=depth))
+    server.warmup(precisions=(precision,))
+    reqs, shed = [], 0
+    for i in range(n):
+        try:
+            reqs.append(server.submit(model, xs[i], precision=precision))
+        except ShedError:
+            shed += 1
+    server.drain()
+    done = sum(1 for r in reqs if r.result(timeout=600) is not None)
+    b = next(b for k, b in server.stats()["buckets"].items()
+             if k.startswith(f"{model}:") and (b["requests"] or b["shed"]))
+    emit(f"serve_chaos_shed_{model}_{precision}", None,
+         f"offered={n};admitted={len(reqs)};shed={b['shed']};"
+         f"max_queue_depth={depth};completed={b['completed']};"
+         f"admitted_all_served={int(done == len(reqs))}")
+
+    # -- breaker: poisoned bucket, K consecutive failures trip it open.
+    inj = FaultInjector(poison_bucket=f"{model}:", seed=seed)
+    server = TconvServer(runners, max_wait_s=MAX_WAIT_S,
+                         fault_injector=inj,
+                         resilience_config=ResilienceConfig(
+                             breaker_threshold=2, breaker_cooldown_s=60.0))
+    reqs, shed = [], 0
+    for i in range(n):
+        try:
+            reqs.append(server.submit(model, xs[i], precision=precision))
+        except ShedError:
+            shed += 1
+        server.serve_once(force=True)   # one batch per submit: serial fails
+    failed = sum(1 for r in reqs if r.done())
+    b = next(b for k, b in server.stats()["buckets"].items()
+             if k.startswith(f"{model}:") and (b["requests"] or b["shed"]))
+    emit(f"serve_chaos_breaker_{model}_{precision}", None,
+         f"offered={n};failed_typed={failed};shed_after_trip={b['shed']};"
+         f"breaker_state={b['breaker']['state']};"
+         f"breaker_trips={b['breaker']['trips']};"
+         f"no_hangs={int(all(r.done() for r in reqs))}")
+
+
 def main() -> None:
     runners = {
         # scale_down=8 (the bench_gan_e2e size): big enough that the
@@ -178,6 +268,10 @@ def main() -> None:
              f"seq_rps={seq:.2f};batched_rps={m['throughput_rps']:.2f};"
              f"speedup={m['throughput_rps'] / seq:.2f}x;"
              f"fill={m['fill']:.2f};target_batch={m['target_batch']}")
+
+    # Degraded-mode chaos regime — lands in the BENCH doc's own
+    # ``serve_chaos`` section (excluded from perf-gate latency banding).
+    run_chaos(runners, "dcgan", precision="f32")
 
 
 if __name__ == "__main__":

@@ -88,11 +88,17 @@ def mm2im_summary(rows: list) -> dict:
     * ``serve`` — every ``serve*`` row from ``bench_serve_tconv`` with its
       derived fields parsed (batched-vs-sequential speedup, batch-fill
       ratio, wait-bound flag), so the serving trajectory diffs alongside
-      the kernel one.
+      the kernel one;
+    * ``serve_chaos`` — the fault-injected degraded-mode rows
+      (``serve_chaos_*``: ladder rung counts, shed/expired/breaker
+      counters) kept in their *own* section: ``tools/bench_gate.py``
+      ignores it for latency banding — degraded-mode latency is the
+      injected fault's artifact, not a kernel regression signal.
     """
     methods = {}
     autotune_rows = []
     serve = {}
+    serve_chaos = {}
     large_image = {}
     tier_hits = None
     for r in rows:
@@ -109,6 +115,8 @@ def mm2im_summary(rows: list) -> dict:
             autotune_rows.append(r)
             if name.startswith("autotune_large_"):
                 large_image[name] = _parse_derived(r["derived"])
+        elif name.startswith("serve_chaos"):
+            serve_chaos[name] = _parse_derived(r["derived"])
         elif name.startswith("serve"):
             serve[name] = _parse_derived(r["derived"])
 
@@ -135,7 +143,7 @@ def mm2im_summary(rows: list) -> dict:
     return {"methods": methods, "autotune": autotune_rows,
             "tier_hits": tier_hits, "modeled_fold_b8": modeled,
             "rank_agreement": rank, "large_image": large_image,
-            "serve": serve}
+            "serve": serve, "serve_chaos": serve_chaos}
 
 
 def main() -> None:

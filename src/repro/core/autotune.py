@@ -139,15 +139,24 @@ def _file_lock(path: Path):
             fcntl.flock(f, fcntl.LOCK_UN)
 
 
+# Paths already warned about as corrupt — one UserWarning per file per
+# process, not one per lookup.  Cleared by reset_shared_caches() (tests).
+_WARNED_CORRUPT: set = set()
+
+
 class PlanCache:
     """On-disk JSON store of tuned plans; safe to share across processes.
 
     The file holds ``{"version": 1, "entries": {key: {"plan": {...},
     "us": ..., ...}}}``.  Writes are atomic (tmp file + ``os.replace``)
     and merge with the current on-disk entries under an advisory file
-    lock, so concurrent tuners sharing one cache lose no keys; a corrupt
-    or version-mismatched file is treated as empty rather than raising,
-    so a bad cache can never break inference.
+    lock, so concurrent tuners sharing one cache lose no keys.  A bad
+    cache can never break inference: a missing or version-mismatched file
+    reads as empty, and a file that does not parse at all — truncated
+    write, disk corruption, stray hand-edit — is **quarantined** to
+    ``<path>.corrupt`` with a one-shot ``UserWarning`` naming the file,
+    rather than being silently treated as empty forever (the old
+    behavior, which hid that all tuned plans had quietly vanished).
     """
 
     def __init__(self, path: Union[str, Path, None] = None):
@@ -164,14 +173,65 @@ class PlanCache:
             return None
 
     def _read_disk(self) -> dict:
-        """Fresh parse of the on-disk entries — no memo, no mtime check."""
+        """Fresh parse of the on-disk entries — no memo, no mtime check.
+
+        Three distinct empty-read cases, deliberately told apart:
+
+        * missing file (or unreadable: permissions) — the normal first-run
+          state, silently empty;
+        * parses but ``version`` mismatches — a cache written by a
+          different schema generation; silently empty by design (see the
+          ``_CACHE_VERSION`` note above — the file is *valid*, just not
+          ours to consume);
+        * does not parse as a JSON object with object ``entries`` —
+          corruption.  Quarantined via :meth:`_quarantine` so the bad
+          bytes stop shadowing the cache path (the next ``_save`` starts
+          a fresh cache) and the operator is warned once instead of
+          every tuned plan silently disappearing.
+        """
         try:
-            raw = json.loads(self.path.read_text())
-            if raw.get("version") == _CACHE_VERSION:
-                return dict(raw.get("entries", {}))
-        except (OSError, ValueError):
-            pass
-        return {}
+            text = self.path.read_text()
+        except OSError:  # missing (first run) or unreadable: empty cache
+            return {}
+        try:
+            raw = json.loads(text)
+            if not isinstance(raw, dict):
+                raise ValueError(
+                    f"top-level JSON is {type(raw).__name__}, not an object")
+        except ValueError as err:
+            self._quarantine(err)
+            return {}
+        if raw.get("version") != _CACHE_VERSION:
+            return {}
+        entries = raw.get("entries", {})
+        if not isinstance(entries, dict):
+            self._quarantine(ValueError(
+                f"'entries' is {type(entries).__name__}, not an object"))
+            return {}
+        return dict(entries)
+
+    def _quarantine(self, err: Exception) -> None:
+        """Move a corrupt cache aside to ``<path>.corrupt`` and warn once.
+
+        ``os.replace`` keeps the bad bytes for post-mortem (restore the
+        file after fixing it, or re-run ``tools/tune_sweep.py``) while
+        clearing the cache path for fresh writes.  The warning is one-shot
+        per path per process so a hot lookup path does not spam.
+        """
+        dest = self.path.with_name(self.path.name + ".corrupt")
+        try:
+            os.replace(self.path, dest)
+            action = f"quarantined to {dest}"
+        except OSError as mv_err:  # read-only fs etc.: warn anyway
+            action = f"could not quarantine to {dest} ({mv_err})"
+        key = str(self.path)
+        if key not in _WARNED_CORRUPT:
+            _WARNED_CORRUPT.add(key)
+            warnings.warn(
+                f"plan cache {self.path} is corrupt ({err}); {action}. "
+                "Tuned plans from it are unavailable — restore the file "
+                "or re-run tools/tune_sweep.py to regenerate.",
+                UserWarning, stacklevel=3)
 
     def _load(self) -> dict:
         # Re-read when the file changed on disk (another PlanCache instance
@@ -472,6 +532,7 @@ def shared_cache(path: Union[str, Path, None] = None) -> PlanCache:
 def reset_shared_caches() -> None:
     """Drop the per-process cache memo (tests; after external cache edits)."""
     _SHARED_CACHES.clear()
+    _WARNED_CORRUPT.clear()
 
 
 # Tier names recorded by kernels.ops.consumed_plans() — who served a hit.

@@ -91,6 +91,12 @@ from repro.kernels.registry import Plan, PlanLike
 
 DEFAULT_METHOD = "mm2im"
 
+# The rung of last resort for degraded-mode re-dispatch
+# (serve/resilience.py): XLA's native conv_transpose — no Pallas, no tile
+# plans, no tuned state to be wrong.  Kept as a named constant so the
+# degradation ladder and the tests agree on what "fully degraded" runs.
+FALLBACK_METHOD = "lax"
+
 
 def _fwd_math(x, w, bias, *, stride, padding):
     """Differentiable mathematical definition (dilated-conv formulation)."""
@@ -432,6 +438,30 @@ def tconv(
                   out_scale=_norm_out_scale(out_scale), out_dtype=out_dtype)
     return _dispatch(x, w, ep, stride=stride, padding=padding, method=method,
                      plan=registry.as_plan(plan))
+
+
+def tconv_reference(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int,
+    padding: str = "SAME",
+    activation: str = "none",
+) -> jax.Array:
+    """Degraded-mode re-dispatch entry: the ``'lax'`` reference, f32.
+
+    The bottom rung of the serving degradation ladder
+    (``serve/resilience.py``) — when the tuned Pallas kernel and the
+    heuristic re-plan both fail, the batch is re-dispatched through this
+    entry: XLA-native ``conv_transpose``, no explicit plan, no plan-cache
+    consultation (``'lax'`` is not plan-capable, so ``_auto_plan`` never
+    runs), so none of the tuned state that may have caused the failure is
+    in the program.  Same Epilogue contract as :func:`tconv` (bias and
+    activation applied by the dispatcher's unfused remainder).
+    """
+    return tconv(x, w, bias, stride=stride, padding=padding,
+                 method=FALLBACK_METHOD, activation=activation)
 
 
 def tconv_int8(

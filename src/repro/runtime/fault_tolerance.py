@@ -19,6 +19,12 @@ Design for 1000+ nodes (DESIGN.md §6):
   timeout watchdog.
 * **Preemption simulation** — ``PreemptionSimulator`` raises at a chosen
   step; tests assert bit-exact resume.
+
+The injection primitives are shared with the *serving* chaos harness
+(``serve/resilience.py``): ``FaultInjector`` composes a
+``StragglerSimulator`` for per-batch stalls, and its transient-fault
+retry uses :func:`jittered_backoff` — one backoff policy for training
+re-dispatch and serving retries.
 """
 
 from __future__ import annotations
@@ -49,19 +55,42 @@ class PreemptionSimulator:
 
 @dataclasses.dataclass
 class StragglerSimulator:
-    """Inject per-step delay with probability p (tests the watchdog path)."""
+    """Inject per-step delay with probability p (tests the watchdog path).
+
+    Deterministic per ``(seed, step)`` — replaying the same step sequence
+    stalls the same steps — and observable via the ``stalls`` counter
+    (the serving chaos harness surfaces it in ``server.stats()``).
+    """
     p: float = 0.0
     delay_s: float = 0.05
     seed: int = 0
+    stalls: int = 0
 
     def maybe_stall(self, step: int):
         if self.p <= 0:
             return False
         rng = np.random.default_rng((self.seed, step))
         if rng.random() < self.p:
+            self.stalls += 1
             time.sleep(self.delay_s)
             return True
         return False
+
+
+def jittered_backoff(attempt: int, *, base_s: float = 0.01,
+                     jitter: float = 0.5,
+                     rng: Optional[np.random.Generator] = None) -> float:
+    """Exponential backoff with multiplicative jitter, in seconds.
+
+    ``base_s * 2**attempt`` scaled by a uniform factor in
+    ``[1 - jitter, 1 + jitter]`` — the jitter decorrelates retriers that
+    failed together (the classic thundering-herd fix), and a caller-owned
+    seeded ``rng`` keeps chaos tests deterministic.
+    """
+    rng = np.random.default_rng(0) if rng is None else rng
+    jitter = min(max(float(jitter), 0.0), 1.0)
+    scale = 1.0 + jitter * (2.0 * float(rng.random()) - 1.0)
+    return float(base_s) * (2.0 ** attempt) * scale
 
 
 def elastic_mesh(model_parallel: int = 1, devices=None):

@@ -6,15 +6,30 @@ bucket with tuned-plan coverage (``bucketing``), a wait-or-flush batcher
 fills fold_batch-tuned batch sizes with a bounded deadline (``batcher``),
 and server start pre-compiles every bucket against the shipped plan
 tables (``warmup``).  Entry point: :class:`TconvServer` (``server``).
+
+The rainy-day half lives in ``resilience`` (DESIGN.md §9.4): per-request
+deadlines, bounded queues with load shedding, a degradation ladder
+(tuned -> heuristic -> [f32] -> lax), per-bucket circuit breakers,
+drain-loop supervision, and the deterministic :class:`FaultInjector`
+chaos hook.
 """
 
 from repro.serve.batcher import Batcher, Request
 from repro.serve.bucketing import (AdmissionError, BucketKey, BucketSpec,
-                                   snap)
-from repro.serve.server import TconvServer
+                                   CircuitOpenError, QueueFullError,
+                                   ShedError, snap)
+from repro.serve.resilience import (CircuitBreaker, DeadlineExceeded,
+                                    DegradationLadder, FaultInjector,
+                                    InjectedFault, LadderExhausted,
+                                    ResilienceConfig, TransientFault)
+from repro.serve.server import ServerClosed, TconvServer
 from repro.serve.warmup import WarmupRecord, warm_runner, warm_server
 
 __all__ = [
-    "AdmissionError", "Batcher", "BucketKey", "BucketSpec", "Request",
-    "TconvServer", "WarmupRecord", "snap", "warm_runner", "warm_server",
+    "AdmissionError", "Batcher", "BucketKey", "BucketSpec",
+    "CircuitBreaker", "CircuitOpenError", "DeadlineExceeded",
+    "DegradationLadder", "FaultInjector", "InjectedFault",
+    "LadderExhausted", "QueueFullError", "Request", "ResilienceConfig",
+    "ServerClosed", "ShedError", "TconvServer", "TransientFault",
+    "WarmupRecord", "snap", "warm_runner", "warm_server",
 ]

@@ -7,17 +7,27 @@ open-loop synthetic traffic through the background drain thread, and
 prints the per-bucket stats snapshot.  The measured version of this loop
 (arrival-rate x image-size x precision sweep, percentile reporting) is
 ``benchmarks/bench_serve_tconv.py``.
+
+Resilience knobs (``serve/resilience.py``): ``--max-queue-depth`` bounds
+each bucket's queue (overflow sheds), ``--deadline-ms`` attaches a
+per-request deadline, and ``--chaos-fail-nth`` injects a deterministic
+transient fault every Nth batch to exercise the degradation ladder.
+Exit status is **nonzero when any bucket ends with ``failed > 0``** (the
+full stats dump goes to stdout first), so the CI smoke legs can assert
+healthy runs with a plain shell check.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
 import numpy as np
 
+from repro.serve.resilience import FaultInjector, ResilienceConfig
 from repro.models.runner import make_runner
 from repro.serve.server import TconvServer
 
@@ -29,7 +39,7 @@ SMOKE_RUNNERS = {
 }
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", default="dcgan,fsrcnn")
     ap.add_argument("--requests", type=int, default=24)
@@ -37,6 +47,15 @@ def main() -> None:
                     help="mean arrival rate, requests/s (Poisson)")
     ap.add_argument("--precisions", default="f32,int8")
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="per-bucket queue cap; overflow is shed "
+                         "(default: unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired requests fail "
+                         "fast with DeadlineExceeded (default: none)")
+    ap.add_argument("--chaos-fail-nth", type=int, default=None,
+                    help="inject a transient fault every Nth batch "
+                         "(degradation-ladder smoke)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,7 +64,15 @@ def main() -> None:
     runners = {n: make_runner(n, key=jax.random.PRNGKey(i),
                               **SMOKE_RUNNERS[n])
                for i, n in enumerate(names)}
-    server = TconvServer(runners, max_wait_s=args.max_wait_ms / 1e3)
+    config = ResilienceConfig(
+        max_queue_depth=args.max_queue_depth,
+        default_deadline_s=(None if args.deadline_ms is None
+                            else args.deadline_ms / 1e3))
+    injector = (FaultInjector(fail_nth_batch=args.chaos_fail_nth,
+                              seed=args.seed)
+                if args.chaos_fail_nth else None)
+    server = TconvServer(runners, max_wait_s=args.max_wait_ms / 1e3,
+                         resilience_config=config, fault_injector=injector)
 
     t0 = time.perf_counter()
     records = server.warmup(precisions=precisions)
@@ -58,7 +85,7 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     gaps = rng.exponential(1.0 / args.rate, args.requests)
-    reqs = []
+    reqs, shed, failed = [], 0, 0
     with server:
         t0 = time.perf_counter()
         for i in range(args.requests):
@@ -66,17 +93,36 @@ def main() -> None:
             name = names[i % len(names)]
             precision = precisions[(i // len(names)) % len(precisions)]
             x = np.asarray(runners[name].example_inputs(1, seed=i))[0]
-            reqs.append(server.submit(name, x, precision=precision))
+            try:
+                reqs.append(server.submit(name, x, precision=precision))
+            except Exception as err:  # noqa: BLE001 — shed/open breaker
+                shed += 1
+                print(f"[serve] request {i} shed: {err}")
+        done = []
         for r in reqs:
-            r.result(timeout=300)
+            try:
+                done.append(r.result(timeout=300))
+            except Exception as err:  # noqa: BLE001 — typed request failure
+                failed += 1
+                print(f"[serve] request {r.rid} failed: "
+                      f"{type(err).__name__}: {err}")
         wall = time.perf_counter() - t0
 
-    lats = sorted(1e3 * r.latency_s for r in reqs)
-    print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
-          f"({len(reqs) / wall:.1f} req/s), "
-          f"p50={lats[len(lats) // 2]:.1f}ms p99={lats[-1]:.1f}ms")
-    print(json.dumps(server.stats(), indent=2, default=str))
+    lats = sorted(1e3 * r.latency_s for r in reqs if r.latency_s is not None)
+    if lats:
+        print(f"[serve] {len(done)}/{len(reqs)} requests ok "
+              f"({shed} shed, {failed} failed) in {wall:.2f}s "
+              f"({len(reqs) / wall:.1f} req/s), "
+              f"p50={lats[len(lats) // 2]:.1f}ms p99={lats[-1]:.1f}ms")
+    stats = server.stats()
+    print(json.dumps(stats, indent=2, default=str))
+    bad = {key: b["failed"] for key, b in stats["buckets"].items()
+           if b["failed"] > 0}
+    if bad:
+        print(f"[serve] FAILED buckets: {bad}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

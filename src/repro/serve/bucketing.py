@@ -42,6 +42,29 @@ class AdmissionError(ValueError):
     """Request rejected at admission (shape/precision/model mismatch)."""
 
 
+class ShedError(AdmissionError):
+    """Request shed at admission for *load* reasons, not caller error.
+
+    Unlike the base :class:`AdmissionError` (the caller sent something the
+    server will never run), a shed is a point-in-time overload signal —
+    the same request resubmitted later may be admitted.  Sheds are counted
+    per bucket (``TconvServer.stats()['buckets'][key]['shed']``) so
+    operators can see which buckets are saturating.  Defined here rather
+    than in ``serve/resilience.py`` so ``batcher`` can raise it without an
+    import cycle.
+    """
+
+
+class QueueFullError(ShedError):
+    """Shed because the bucket's queue is at ``max_queue_depth``."""
+
+
+class CircuitOpenError(ShedError):
+    """Shed because the bucket's circuit breaker is open (see
+    ``serve/resilience.py``: K consecutive batch failures trip the
+    breaker; a half-open probe is admitted after the cooldown)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
     model: str

@@ -323,3 +323,19 @@ def test_bench_gate_rejects_unreadable_input(tmp_path):
         capture_output=True, text=True)
     assert proc.returncode != 0
     assert "cannot read" in proc.stderr
+
+
+def test_bench_gate_ignores_serve_chaos_section(tmp_path):
+    """ISSUE 10: degraded-mode chaos rows (fault-injected latencies) must
+    not influence either gate leg — a candidate differing only in its
+    ``serve_chaos`` section gates identically to the baseline."""
+    base = {"autotune": RECORDED_ROWS + [_tuned_row("autotune_a", 1.4)],
+            "serve_chaos": {"serve_chaos_ladder_dcgan_f32":
+                            {"retries": "2", "degraded": "2"}}}
+    cand = json.loads(json.dumps(base))
+    cand["serve_chaos"] = {"serve_chaos_breaker_dcgan_f32":
+                           {"shed_after_trip": "14",
+                            "breaker_state": "open"}}
+    code, out = _gate(tmp_path, cand, base)
+    assert code == 0, out
+    assert "serve_chaos" not in out              # stripped before both legs

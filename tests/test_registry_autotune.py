@@ -180,9 +180,71 @@ def test_cache_tolerates_corruption(tmp_path):
     path = tmp_path / "cache.json"
     path.write_text("{not json")
     c = PlanCache(path)
-    assert c.get("k") is None
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert c.get("k") is None
     c.put("k", Plan(2, 8))
     assert PlanCache(path).get("k") == Plan(2, 8)
+
+
+def test_corrupt_cache_quarantined_with_oneshot_warning(tmp_path):
+    """ISSUE 10: a cache that does not parse is moved to ``<path>.corrupt``
+    and warned about once (naming the file), instead of being silently
+    read as empty forever."""
+    from repro.core import autotune
+
+    autotune.reset_shared_caches()
+    path = tmp_path / "cache.json"
+    path.write_text('{"version": 1, "entries": {')   # truncated write
+    with pytest.warns(UserWarning, match=str(path)) as rec:
+        assert PlanCache(path)._read_disk() == {}
+    assert len(rec) == 1
+    assert (tmp_path / "cache.json.corrupt").read_text().startswith(
+        '{"version"')                                # bytes kept for triage
+    assert not path.exists()                         # path cleared for writes
+    # one-shot per path per process: a second corrupt read warns nothing
+    path.write_text("[1, 2, 3]")                     # non-object JSON
+    import warnings as _w
+    with _w.catch_warnings(record=True) as again:
+        _w.simplefilter("always")
+        assert PlanCache(path)._read_disk() == {}
+    assert again == []
+    autotune.reset_shared_caches()                   # clears the warn memo
+
+
+def test_structural_garbage_quarantined_not_attribute_error(tmp_path):
+    """Valid JSON that is not the cache schema (non-object top level,
+    non-object entries) used to escape the old ``(OSError, ValueError)``
+    net as an AttributeError; now it quarantines like any corruption."""
+    from repro.core import autotune
+
+    for payload in ('["not", "a", "dict"]',
+                    '{"version": 1, "entries": [1, 2]}'):
+        autotune.reset_shared_caches()
+        path = tmp_path / "garbage.json"
+        path.write_text(payload)
+        with pytest.warns(UserWarning, match="corrupt"):
+            assert PlanCache(path)._read_disk() == {}
+        assert not path.exists()
+        (tmp_path / "garbage.json.corrupt").unlink()
+    autotune.reset_shared_caches()
+
+
+def test_version_mismatch_still_silently_empty(tmp_path):
+    """A *valid* cache from another schema generation is not corruption:
+    read as empty with no warning and no quarantine (documented behavior
+    — see the ``_CACHE_VERSION`` note in ``core/autotune.py``)."""
+    import json as _json
+    import warnings as _w
+
+    from repro.core import autotune
+
+    autotune.reset_shared_caches()
+    path = tmp_path / "cache.json"
+    path.write_text(_json.dumps({"version": 999, "entries": {"k": {}}}))
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        assert PlanCache(path)._read_disk() == {}
+    assert rec == [] and path.exists()
 
 
 def test_cache_key_stability():

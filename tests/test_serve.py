@@ -177,6 +177,48 @@ def test_request_result_timeout_and_error():
         r.result(timeout=0)
 
 
+def test_request_unfulfilled_wait_never_returns_none():
+    """Regression (ISSUE 10): an unfulfilled ``result(timeout=)`` must
+    raise ``TimeoutError``, never return a value — ``None`` would be
+    indistinguishable from a legitimately-``None`` payload."""
+    r = _req(0, t=0.0)
+    with pytest.raises(TimeoutError, match="not served"):
+        r.result(timeout=0)
+    # a real None payload, by contrast, is returned as-is
+    r2 = _req(1, t=0.0)
+    r2.set_result(None, t_done=1.0)
+    assert r2.result(timeout=0) is None
+    # and a fulfilled event with neither value nor error is an invariant
+    # violation, reported as such rather than handed back as a result
+    r3 = _req(2, t=0.0)
+    r3._event.set()
+    with pytest.raises(RuntimeError, match="no result/error"):
+        r3.result(timeout=0)
+
+
+def test_batcher_bounded_queue_and_expiry():
+    from repro.serve.bucketing import QueueFullError
+
+    b = Batcher(max_wait_s=10.0, max_queue_depth=2)
+    spec = _spec(8)
+    b.put(spec, _req(0, t=0.0))
+    b.put(spec, _req(1, t=0.0))
+    with pytest.raises(QueueFullError):
+        b.put(spec, _req(2, t=0.0))
+    assert b.pending() == 2                      # overflow was not enqueued
+    # expiry: deadline-carrying request is removed before batching, FIFO
+    # order of the survivors kept
+    exp = Request(3, "m", np.zeros(4, np.float32), "f32", 0.0, deadline=1.0)
+    b2 = Batcher(max_wait_s=10.0)
+    b2.put(spec, _req(4, t=0.0))
+    b2.put(spec, exp)
+    b2.put(spec, _req(5, t=0.0))
+    [(_, dead)] = b2.pop_expired(now=1.0)
+    assert [r.rid for r in dead] == [3]
+    [(_, live, _)] = b2.ready(now=0.0, force=True)
+    assert [r.rid for r in live] == [4, 5]
+
+
 # ---------------------------------------------------------------------------
 # Warmup consumes the shipped table (tier attribution).
 # ---------------------------------------------------------------------------
@@ -309,3 +351,88 @@ def test_server_rejects_and_counts(dcgan_params):
     with pytest.raises(AdmissionError, match="shape"):
         server.submit("dcgan", np.zeros(7, np.float32))
     assert server.stats()["rejected"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Shutdown / drain edge paths (ISSUE 10): no request left unfulfilled.
+# ---------------------------------------------------------------------------
+
+
+class _EchoRunner:
+    """Minimal duck-typed runner: instant zero outputs, no jax."""
+
+    name = "echo"
+
+    def input_shape(self):
+        return (4,)
+
+    def tconv_problems(self):
+        return {}
+
+    def has_compiled(self, *, batch, precision="f32"):
+        return False
+
+    def jitted(self, *, batch, precision="f32"):
+        return lambda x: np.zeros((batch, 4), np.float32)
+
+
+def test_server_drain_timeout_raises():
+    """``drain`` must raise ``TimeoutError`` when the queue cannot empty
+    within the budget — here execution re-submits a request per batch, so
+    pending never reaches zero."""
+    r = _EchoRunner()
+    server = TconvServer({"echo": r}, candidate_batches=(1,),
+                         default_batch=1)
+
+    def resubmitting(x):
+        server.submit("echo", np.zeros(4, np.float32))
+        return np.zeros((1, 4), np.float32)
+
+    r.jitted = lambda *, batch, precision="f32": resubmitting
+    server.submit("echo", np.zeros(4, np.float32))
+    with pytest.raises(TimeoutError, match="drain"):
+        server.drain(timeout=0.2)
+    assert server._batcher.pending() >= 1        # really never emptied
+
+
+def test_server_stop_serves_requests_in_flight():
+    """``stop()`` with queued requests drains them: every request is
+    fulfilled, none left blocking its caller."""
+    server = TconvServer({"echo": _EchoRunner()}, max_wait_s=60.0,
+                         candidate_batches=(4,), default_batch=4)
+    server.start()
+    reqs = [server.submit("echo", np.zeros(4, np.float32))
+            for _ in range(6)]
+    server.stop()
+    assert all(r.done() for r in reqs)
+    outs = [r.result(timeout=0) for r in reqs]
+    assert all(o.shape == (4,) for o in outs)
+    s = server.stats()
+    [b] = s["buckets"].values()
+    assert b["completed"] == 6 and s["pending"] == 0
+
+
+def test_server_stop_fails_unservable_requests_typed():
+    """When execution cannot succeed at any ladder rung, ``stop()`` still
+    settles every request — failed with a typed error, not wedged."""
+    from repro.serve.resilience import LadderExhausted
+
+    r = _EchoRunner()
+
+    def broken(x):
+        raise ValueError("permanently broken")
+
+    r.jitted = lambda *, batch, precision="f32": broken
+    server = TconvServer({"echo": r}, max_wait_s=60.0,
+                         candidate_batches=(2,), default_batch=2)
+    server.start()
+    reqs = [server.submit("echo", np.zeros(4, np.float32))
+            for _ in range(3)]
+    server.stop()
+    assert all(q.done() for q in reqs)
+    for q in reqs:
+        with pytest.raises(LadderExhausted):
+            q.result(timeout=0)
+    s = server.stats()
+    [b] = s["buckets"].values()
+    assert b["failed"] == 3 and s["pending"] == 0
